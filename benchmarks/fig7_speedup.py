@@ -1,0 +1,34 @@
+"""Paper Fig. 7: per-mode spMTTKRP speedup of O-SRAM over E-SRAM FPGA.
+
+Validation targets (paper §V-B): band 1.1x-2.9x, mean 1.68x, NELL-2 &
+PATENTS high (cache-bound), NELL-1 & DELICIOUS low (DRAM-bound).
+"""
+
+import numpy as np
+
+from repro.core.perf_model import speedup_table
+
+
+def run() -> list[tuple[str, float, str]]:
+    st = speedup_table()
+    rows = []
+    allsp = []
+    for name, results in st.items():
+        for r in results:
+            rows.append(
+                (
+                    f"fig7.{name}.M{r.mode}",
+                    round(r.speedup, 3),
+                    f"{r.t_esram.bottleneck}->{r.t_osram.bottleneck}",
+                )
+            )
+            allsp.append(r.speedup)
+    rows.append(("fig7.min_speedup", round(min(allsp), 3), "paper: 1.1"))
+    rows.append(("fig7.max_speedup", round(max(allsp), 3), "paper: 2.9"))
+    rows.append(("fig7.mean_speedup", round(float(np.mean(allsp)), 3), "paper avg: 1.68"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

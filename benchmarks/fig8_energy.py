@@ -1,0 +1,25 @@
+"""Paper Fig. 8: energy savings of O-SRAM FPGA vs E-SRAM FPGA per tensor.
+
+Validation targets (paper §V-C): band 2.8x-8.1x, average ~5.3x.
+"""
+
+import numpy as np
+
+from repro.core.perf_model import energy_table
+
+
+def run() -> list[tuple[str, float, str]]:
+    et = energy_table()
+    rows = []
+    for name, te in et.items():
+        rows.append((f"fig8.{name}.savings", round(te.savings, 3), ""))
+    sv = [te.savings for te in et.values()]
+    rows.append(("fig8.min_savings", round(min(sv), 3), "paper: 2.8"))
+    rows.append(("fig8.max_savings", round(max(sv), 3), "paper: 8.1"))
+    rows.append(("fig8.mean_savings", round(float(np.mean(sv)), 3), "paper avg: 5.3"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

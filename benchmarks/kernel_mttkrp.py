@@ -1,0 +1,89 @@
+"""spMTTKRP kernel benchmark: Pallas (interpret) vs jnp reference, plus the
+TPU-side roofline terms of the kernel derived from its block schedule.
+
+Wall-times on this CPU container measure the interpret-mode overhead, NOT
+TPU speed; the roofline terms are the TPU-relevant output (assignment:
+reason from the schedule, not from wall clock).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.memory_tech import TPU_V5E
+from repro.core.mttkrp import mttkrp_ref
+from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
+from repro.data.frostt import FROSTT_TENSORS
+from repro.kernels.mttkrp import mttkrp_pallas
+
+
+def _time(f, *args, reps=3):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def kernel_roofline(nnz_pad: int, rank: int, nmodes: int, i_out: int, rows_per_block: int):
+    """TPU roofline terms for the kernel's schedule (per mode).
+
+    HBM traffic: vals + local ids + gathered rows (K * nnz * R_pad * 4B,
+    f32) + output write-back once per block.  FLOPs: one-hot matmul
+    (rows_per_block x tile) @ (tile x R_pad) per tile + elementwise.
+    """
+    r_pad = max(128, rank)
+    k = nmodes - 1
+    bytes_in = nnz_pad * (4 + 4) + k * nnz_pad * r_pad * 4
+    blocks = -(-i_out // rows_per_block)
+    bytes_out = blocks * rows_per_block * r_pad * 4
+    flops = 2.0 * nnz_pad * rows_per_block * r_pad + (k + 1) * nnz_pad * r_pad
+    return {
+        "memory_s": (bytes_in + bytes_out) / TPU_V5E.hbm_bw,
+        "compute_s": flops / TPU_V5E.peak_bf16_flops,
+    }
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    t = random_sparse_tensor((2048, 1024, 1024), nnz=40_000, seed=0)
+    facs = [
+        jax.random.normal(jax.random.PRNGKey(i), (s, 16)) for i, s in enumerate(t.shape)
+    ]
+    ref_us = _time(lambda: mttkrp_ref(t, facs, 0))
+    pal_us = _time(lambda: mttkrp_pallas(t, facs, 0, interpret=True))
+    got = np.asarray(mttkrp_pallas(t, facs, 0, interpret=True))
+    want = np.asarray(mttkrp_ref(t, facs, 0))
+    err = float(np.abs(got - want).max() / (np.abs(want).max() + 1e-9))
+    rows.append(("kernel.mttkrp.ref_us", round(ref_us, 1), "jnp segment-sum"))
+    rows.append(("kernel.mttkrp.pallas_interpret_us", round(pal_us, 1), "CPU interpret mode"))
+    rows.append(("kernel.mttkrp.max_rel_err", err, "vs oracle"))
+
+    plan = build_mttkrp_plan(t, 0, tile_nnz=256, rows_per_block=256)
+    rows.append(("kernel.mttkrp.padding_overhead", round(plan.padding_overhead, 3), ""))
+    rl = kernel_roofline(plan.nnz_pad, 16, t.nmodes, t.shape[0], 256)
+    rows.append(("kernel.mttkrp.tpu_memory_term_us", round(rl["memory_s"] * 1e6, 2), ""))
+    rows.append(("kernel.mttkrp.tpu_compute_term_us", round(rl["compute_s"] * 1e6, 2), ""))
+    rows.append(
+        (
+            "kernel.mttkrp.tpu_bottleneck",
+            0.0,
+            "memory" if rl["memory_s"] > rl["compute_s"] else "compute",
+        )
+    )
+
+    # NELL-2-like scaled tensor: per-mode memory term at FROSTT scale
+    fr = FROSTT_TENSORS["NELL-2"]
+    rl2 = kernel_roofline(fr.nnz, 16, fr.nmodes, fr.dims[0], 256)
+    rows.append(
+        ("kernel.mttkrp.nell2_full_memory_term_ms", round(rl2["memory_s"] * 1e3, 2),
+         "one v5e chip, mode 0")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

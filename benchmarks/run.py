@@ -1,0 +1,62 @@
+# One function per paper table/figure. Prints ``name,value,derived`` CSV.
+"""Benchmark aggregator: paper tables/figures + kernel + CP-ALS + roofline.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-slow]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        cp_als_bench,
+        fig7_speedup,
+        fig8_energy,
+        kernel_mttkrp,
+        reordering,
+        table3_energy,
+        table4_area,
+    )
+
+    modules = [table3_energy, table4_area, fig7_speedup, fig8_energy]
+    if not args.skip_slow:
+        modules += [kernel_mttkrp, cp_als_bench, reordering]
+
+    print("name,value,derived")
+    for mod in modules:
+        for name, value, derived in mod.run():
+            print(f"{name},{value},{derived}")
+
+    # Roofline summary from dry-run artifacts, if present.
+    results = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+    if results.exists():
+        import json
+
+        ok = skip = 0
+        for p in sorted(results.glob("*.json")):
+            rec = json.loads(p.read_text())
+            if rec.get("status") == "ok":
+                ok += 1
+                r = rec["roofline"]
+                print(
+                    f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']},"
+                    f"{max(r['compute_s'], r['memory_s'], r['collective_s']):.4f},"
+                    f"dom={r['dominant']} mfu={r['mfu_roofline']:.4f}"
+                )
+            elif rec.get("status") == "skip":
+                skip += 1
+        print(f"roofline.cells_ok,{ok},")
+        print(f"roofline.cells_skipped,{skip},documented in DESIGN.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table III: per-bit energy of E-SRAM vs O-SRAM (pJ/cycle @ 500 MHz)."""
+
+from repro.core.perf_model import energy_constants
+
+
+def run() -> list[tuple[str, float, str]]:
+    c = energy_constants()
+    rows = [
+        ("table3.static.electrical_pj", c["static"]["electrical"], "paper: 1.175e-6"),
+        ("table3.static.optical_pj", c["static"]["optical"], "paper: 4.17e-6"),
+        ("table3.switching.electrical_pj", c["switching"]["electrical"], "paper: 4.68"),
+        ("table3.switching.optical_pj", c["switching"]["optical"], "paper: 1.04"),
+        (
+            "table3.switching_ratio",
+            c["switching"]["electrical"] / c["switching"]["optical"],
+            "E/O per-bit switching (4.5x)",
+        ),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

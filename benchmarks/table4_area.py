@@ -1,0 +1,20 @@
+"""Paper Table IV: area of E-SRAM vs O-SRAM systems (mm^2)."""
+
+from repro.core.perf_model import area_table
+
+
+def run() -> list[tuple[str, float, str]]:
+    a = area_table()
+    rows = []
+    for sysname, parts in a.items():
+        tag = sysname.split()[0].lower().replace("-", "_")
+        for part, v in parts.items():
+            rows.append((f"table4.{tag}.{part}_mm2", v, ""))
+    ratio = a["O-SRAM system"]["total"] / a["E-SRAM system"]["total"]
+    rows.append(("table4.total_area_ratio", ratio, "wafer-scale necessity (~4.2e3)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHITECTURES, get_config, reduced_config
+
+__all__ = ["ARCHITECTURES", "get_config", "reduced_config"]

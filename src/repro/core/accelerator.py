@@ -1,0 +1,201 @@
+"""spMTTKRP accelerator configuration + per-mode execution-time model.
+
+Implements the paper's §IV accelerator (Table I) and the throughput model
+used for Fig. 7.  The per-mode execution time is the max of three
+steady-state rates (fully pipelined design, §IV-B):
+
+  * compute      — N*|T|*R elementary ops over n_pe * n_pipelines lanes
+                   at f_electrical (paper §IV-A "total computations");
+  * cache/on-chip— (N-1) factor-row requests per nonzero served by
+                   ``n_caches`` caches; each request occupies a cache for
+                   1 cycle on a hit and ``miss_occupancy`` cycles on a miss
+                   on E-SRAM (tag + line fill through 2x32b ports, Fig 5/6
+                   dual-pipeline partially hides it).  On O-SRAM the same
+                   occupancy is divided by the effective port concurrency
+                   of Eq (1) (200 words/cycle), which is the paper's whole
+                   point: *the cache subsystem stops being the bottleneck*;
+  * DRAM         — the §IV-A traffic formula |T| + (N-1)|T|R + I_out*R
+                   with only cache MISSES touching DRAM for factor rows.
+
+Speedup(O/E) per mode then reproduces Fig. 7's 1.1x-2.9x band: cache-bound
+tensors (NELL-2, PATENTS) accelerate, DRAM-bound ones (NELL-1, DELICIOUS)
+do not — the paper's headline qualitative result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cache_sim import CacheConfig, che_hit_rate
+from repro.core.memory_tech import (
+    E_SRAM,
+    PAPER_SYSTEM,
+    MemoryTechSpec,
+    SystemConstants,
+)
+from repro.data.frostt import FrosttTensor
+
+__all__ = ["AcceleratorConfig", "ModeTime", "mode_execution_time", "PAPER_ACCEL"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorConfig:
+    """Paper Table I."""
+
+    n_pe: int = 4  # Number of PEs (= number of DRAM channels)
+    pipelines_per_pe: int = 80  # Parallel pipelines
+    psum_buffer_elems: int = 1024  # Partial Matrix Buffer size
+    n_caches: int = 3  # Cache subsystem: number of caches
+    cache: CacheConfig = CacheConfig(num_lines=4096, line_bytes=64, associativity=4)
+    n_dma: int = 6  # DMA buffers
+    dma_buffer_bytes: int = 64 * 1024
+    value_bytes: int = 4
+    index_bytes: int = 4
+    # E-SRAM cache request occupancy in electrical cycles: a 64 B line
+    # through banked BRAM ports (CALIBRATED: 3 cycles/request base) plus a
+    # miss penalty (tag re-probe + fill, dual-pipeline partially overlapped).
+    base_request_occupancy: float = 3.5
+    miss_occupancy: float = 5.0
+    tag_bits: int = 32
+    lru_bits: int = 64
+
+    def onchip_bytes_used(self, rank: int) -> int:
+        """Total on-chip memory the design instantiates (for Eq 2/3 energy)."""
+        cache_total = self.n_caches * self.cache.capacity_bytes
+        tag_total = self.n_caches * self.cache.num_lines * 8  # tag+LRU+state
+        psum = self.pipelines_per_pe * self.psum_buffer_elems * self.value_bytes
+        dma = self.n_dma * self.dma_buffer_bytes
+        return self.n_pe * (cache_total + tag_total + psum + dma)
+
+
+PAPER_ACCEL = AcceleratorConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeTime:
+    """Per-mode steady-state rates (nonzeros per electrical cycle) + time."""
+
+    mode: int
+    rate_compute: float
+    rate_cache: float
+    rate_dram: float
+    hit_rates: tuple[float, ...]
+    dram_bytes: float
+    onchip_bytes_touched: float
+    seconds: float
+
+    @property
+    def bottleneck(self) -> str:
+        rates = {
+            "compute": self.rate_compute,
+            "onchip": self.rate_cache,
+            "dram": self.rate_dram,
+        }
+        return min(rates, key=rates.get)
+
+
+def _input_hit_rates(
+    tensor: FrosttTensor, mode: int, accel: AcceleratorConfig, rank: int
+) -> tuple[float, ...]:
+    """Hit rate per non-output factor via Che/LRU (full-size analytical path).
+
+    Caches are shared among input factor matrices (§IV: 'Each cache is
+    shared with multiple input factor matrices'): capacity is split evenly
+    across the N-1 input factors.
+    """
+    row_bytes = rank * 4
+    total_rows = accel.n_caches * accel.cache.capacity_bytes // row_bytes
+    n_inputs = tensor.nmodes - 1
+    rows_per_input = max(1, total_rows // n_inputs)
+    hits = []
+    for k in range(tensor.nmodes):
+        if k == mode:
+            continue
+        hits.append(
+            che_hit_rate(tensor.dims[k], rows_per_input, zipf_alpha=tensor.zipf_alpha)
+        )
+    return tuple(hits)
+
+
+def mode_execution_time(
+    tensor: FrosttTensor,
+    mode: int,
+    tech: MemoryTechSpec,
+    *,
+    rank: int = 16,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    hit_rates: tuple[float, ...] | None = None,
+) -> ModeTime:
+    n = tensor.nmodes
+    nnz = tensor.nnz
+    f = system.f_electrical
+
+    # --- compute rate (paper: N*|T|*R ops per mode) ------------------------
+    lanes = accel.n_pe * accel.pipelines_per_pe
+    rate_compute = lanes / (n * rank)
+
+    # --- cache / on-chip rate ----------------------------------------------
+    if hit_rates is None:
+        hit_rates = _input_hit_rates(tensor, mode, accel, rank)
+    # Requests per nonzero: one row load per input factor.
+    # E-SRAM: each request occupies its cache ``base_request_occupancy``
+    # cycles (64 B line through banked BRAM ports) plus ``miss_occupancy``
+    # on a miss.  O-SRAM: the same occupancy divided by the Eq-(1)
+    # concurrency (200 words/electrical cycle vs 2) — the paper's point.
+    concurrency = tech.effective_ports(f) / E_SRAM.effective_ports(f)
+    avg_occ = 0.0
+    for h in hit_rates:
+        avg_occ += accel.base_request_occupancy + (1.0 - h) * accel.miss_occupancy
+    avg_occ /= max(len(hit_rates), 1)
+    requests_per_nnz = n - 1
+    rate_cache = (accel.n_pe * accel.n_caches * concurrency) / (
+        requests_per_nnz * avg_occ
+    )
+    # The O-SRAM path is still bounded by issue slots of the electrical mesh
+    # (sync interface, §III-A): it cannot exceed one request slot per
+    # pipeline per cycle.
+    rate_cache = min(rate_cache, lanes / requests_per_nnz)
+
+    # --- DRAM rate (paper traffic formula, misses only for factor rows) ----
+    stream_bytes = accel.value_bytes + n * accel.index_bytes  # nonzero element
+    row_bytes = accel.cache.line_bytes  # one R=16 fp32 row == one line
+    miss_bytes = sum((1.0 - h) for h in hit_rates) * row_bytes
+    out_bytes = tensor.dims[mode] * rank * accel.value_bytes / nnz  # amortized
+    dram_bytes_per_nnz = stream_bytes + miss_bytes + out_bytes
+    rate_dram = system.dram_bw / (dram_bytes_per_nnz * f)
+
+    rate = min(rate_compute, rate_cache, rate_dram)
+    seconds = nnz / (rate * f)
+
+    # On-chip SWITCHED bits per nonzero (for the Eq-3 switching energy).
+    # E-SRAM reads all ``associativity`` ways in parallel (Fig 5/6 pulls m
+    # data ways at once) + tags + LRU state, and pays fill/writeback bits
+    # on misses.  O-SRAM's phased access (tag, then the single hit way)
+    # switches only the needed bits — its 40x frequency headroom hides the
+    # serialization.  Partial-sum RMW and DMA staging are equal for both.
+    line_bits = accel.cache.line_bytes * 8
+    per_request = 0.0
+    for h in hit_rates:
+        if tech.phased_access:
+            per_request += accel.tag_bits + line_bits + (1.0 - h) * line_bits
+        else:
+            per_request += (
+                accel.cache.associativity * (line_bits + accel.tag_bits)
+                + accel.lru_bits
+                + (1.0 - h) * 2 * line_bits  # fill + victim writeback
+            )
+    psum_bits = 2 * rank * 32  # read + write of the output row slice
+    stream_bits = stream_bytes * 8
+    switched_bits_per_nnz = per_request + psum_bits + stream_bits
+
+    return ModeTime(
+        mode=mode,
+        rate_compute=rate_compute,
+        rate_cache=rate_cache,
+        rate_dram=rate_dram,
+        hit_rates=hit_rates,
+        dram_bytes=dram_bytes_per_nnz * nnz,
+        onchip_bytes_touched=switched_bits_per_nnz / 8.0 * nnz,
+        seconds=seconds,
+    )

@@ -1,0 +1,133 @@
+"""Trace-driven set-associative LRU cache simulator (paper Figs. 5 & 6).
+
+Models the paper's cache subsystem: per-PE caches holding factor-matrix
+rows, 4-way set-associative, 4096 lines x 64 B, LRU replacement, with the
+dual PE/MEM pipeline abstracted to hit/miss accounting (timing effects of
+misses are applied by the accelerator model, not here).
+
+Two entry points:
+  * ``simulate_trace``  — exact simulation over an index trace (executable
+    small/scaled tensors);
+  * ``che_hit_rate``    — Che's approximation for LRU under an IRM with a
+    Zipf popularity law (used for the full-size FROSTT tensors whose raw
+    data is unavailable offline; DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["CacheConfig", "CacheStats", "simulate_trace", "che_hit_rate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Paper Table I cache-subsystem defaults."""
+
+    num_lines: int = 4096
+    line_bytes: int = 64
+    associativity: int = 4
+
+    @property
+    def num_sets(self) -> int:
+        return self.num_lines // self.associativity
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_lines * self.line_bytes
+
+
+@dataclasses.dataclass
+class CacheStats:
+    accesses: int
+    hits: int
+
+    @property
+    def misses(self) -> int:
+        return self.accesses - self.hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+
+def simulate_trace(
+    trace: np.ndarray, cfg: CacheConfig = CacheConfig(), *, row_bytes: int = 64
+) -> CacheStats:
+    """Simulate LRU set-associative cache over a row-index trace.
+
+    ``trace`` holds factor-matrix ROW indices; a row occupies
+    ``ceil(row_bytes / line_bytes)`` consecutive lines (R=16 fp32 rows are
+    exactly one 64 B line, the paper's configuration).
+    """
+    lines_per_row = max(1, -(-row_bytes // cfg.line_bytes))
+    n_sets = cfg.num_sets
+    assoc = cfg.associativity
+
+    tags = np.full((n_sets, assoc), -1, dtype=np.int64)
+    stamp = np.zeros((n_sets, assoc), dtype=np.int64)
+    accesses = 0
+    hits = 0
+    t = 0
+    for row in trace:
+        base = int(row) * lines_per_row
+        for off in range(lines_per_row):
+            line = base + off
+            s = line % n_sets
+            accesses += 1
+            t += 1
+            way = np.nonzero(tags[s] == line)[0]
+            if way.size:
+                hits += 1
+                stamp[s, way[0]] = t
+            else:
+                victim = int(np.argmin(stamp[s]))
+                tags[s, victim] = line
+                stamp[s, victim] = t
+    return CacheStats(accesses=accesses, hits=hits)
+
+
+def che_hit_rate(
+    num_rows: int, cache_rows: int, *, zipf_alpha: float = 0.7, samples: int = 200_000
+) -> float:
+    """Che's approximation: LRU hit rate for Zipf(alpha) popularity.
+
+    Solves sum_i (1 - exp(-p_i * T)) = C for the characteristic time T,
+    then hit = sum_i p_i (1 - exp(-p_i * T)).  For num_rows <= cache_rows
+    this returns ~1 (compulsory misses are handled by the caller).
+    """
+    if num_rows <= 0:
+        return 1.0
+    if num_rows <= cache_rows:
+        return 1.0
+    n = min(num_rows, samples)
+    # Subsample ranks geometrically for very large catalogs to keep it fast.
+    if num_rows > samples:
+        ranks = np.unique(
+            np.geomspace(1, num_rows, samples).astype(np.int64)
+        ).astype(np.float64)
+        weights = np.empty_like(ranks)
+        edges = np.concatenate([[0.5], (ranks[:-1] + ranks[1:]) / 2.0, [num_rows + 0.5]])
+        weights = edges[1:] - edges[:-1]  # how many ranks each sample represents
+    else:
+        ranks = np.arange(1, n + 1, dtype=np.float64)
+        weights = np.ones_like(ranks)
+    p = ranks ** (-zipf_alpha)
+    z = float((p * weights).sum())
+    p /= z
+
+    lo, hi = 1.0, 1e16
+    for _ in range(200):
+        mid = np.sqrt(lo * hi)
+        filled = float(((1.0 - np.exp(-p * mid)) * weights).sum())
+        if filled > cache_rows:
+            hi = mid
+        else:
+            lo = mid
+        if hi / lo < 1 + 1e-9:
+            break
+    t_char = np.sqrt(lo * hi)
+    hit = float((p * (1.0 - np.exp(-p * t_char)) * weights).sum())
+    return min(max(hit, 0.0), 1.0)

@@ -1,0 +1,106 @@
+"""Mode-wise sparse MTTKRP — the paper's Algorithm 1 as a JAX API.
+
+Three interchangeable execution paths (all numerically validated against
+each other in tests/):
+
+  * ``mttkrp_ref``      — pure-jnp oracle (gather + segment_sum).
+  * ``mttkrp_pallas``   — the TPU-native Pallas kernel (kernels/mttkrp).
+  * ``mttkrp_sharded``  — multi-device path (distributed/mttkrp_dist).
+
+For a tensor with |T| nonzeros, N modes and rank R the per-mode cost is
+``N * |T| * R`` flop-pairs and ``|T| + (N-1)*|T|*R + I_out*R`` element
+transfers (paper §IV-A) — those closed forms live in core.accelerator and
+are asserted against jax cost_analysis in tests/test_perf_model.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_tensor import SparseTensor
+
+__all__ = ["mttkrp_ref", "mttkrp", "khatri_rao"]
+
+
+def khatri_rao(mats: Sequence[jax.Array]) -> jax.Array:
+    """Column-wise Khatri-Rao product of factor matrices (dense; tests only)."""
+    out = mats[0]
+    for m in mats[1:]:
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, out.shape[-1])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "i_out"))
+def _mttkrp_ref_jit(
+    indices: jax.Array,  # (nnz, nmodes) int32
+    values: jax.Array,  # (nnz,)
+    factors: tuple[jax.Array, ...],
+    *,
+    mode: int,
+    i_out: int,
+) -> jax.Array:
+    nmodes = indices.shape[1]
+    rank = factors[0].shape[1]
+    acc_dtype = jnp.promote_types(values.dtype, jnp.float32)
+    prod = values.astype(acc_dtype)[:, None] * jnp.ones((1, rank), acc_dtype)
+    for k in range(nmodes):
+        if k == mode:
+            continue
+        rows = jnp.take(factors[k], indices[:, k], axis=0).astype(acc_dtype)
+        prod = prod * rows
+    seg = indices[:, mode]
+    out = jax.ops.segment_sum(prod, seg, num_segments=i_out)
+    return out.astype(factors[mode].dtype if mode < len(factors) else values.dtype)
+
+
+def mttkrp_ref(
+    tensor: SparseTensor | tuple[jax.Array, jax.Array, tuple[int, ...]],
+    factors: Sequence[jax.Array],
+    mode: int,
+) -> jax.Array:
+    """Reference MTTKRP: out[i_m, r] = sum_{nnz at i_m} val * prod_k F_k[i_k, r]."""
+    if isinstance(tensor, SparseTensor):
+        indices = jnp.asarray(tensor.indices)
+        values = jnp.asarray(tensor.values)
+        shape = tensor.shape
+    else:
+        indices, values, shape = tensor
+    return _mttkrp_ref_jit(indices, values, tuple(factors), mode=mode, i_out=shape[mode])
+
+
+def mttkrp(
+    tensor: SparseTensor,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    impl: str = "ref",
+    **kwargs,
+) -> jax.Array:
+    """Dispatching front-end. impl in {"ref", "pallas", "sharded"}."""
+    if impl == "ref":
+        return mttkrp_ref(tensor, factors, mode)
+    if impl == "pallas":
+        from repro.kernels.mttkrp import ops as mttkrp_ops
+
+        return mttkrp_ops.mttkrp_pallas(tensor, factors, mode, **kwargs)
+    if impl == "sharded":
+        from repro.distributed import mttkrp_dist
+
+        return mttkrp_dist.mttkrp_sharded(tensor, factors, mode, **kwargs)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def dense_mttkrp_oracle(
+    dense: np.ndarray, factors: Sequence[np.ndarray], mode: int
+) -> np.ndarray:
+    """O(prod(shape)) oracle via explicit unfolding — tiny tensors only."""
+    n = dense.ndim
+    perm = [mode] + [k for k in range(n) if k != mode]
+    unfolded = np.transpose(dense, perm).reshape(dense.shape[mode], -1)
+    kr = np.asarray(khatri_rao([jnp.asarray(factors[k]) for k in range(n) if k != mode]))
+    return unfolded @ kr

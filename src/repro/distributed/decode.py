@@ -1,0 +1,86 @@
+"""Context-parallel decode: KV cache sharded over SEQUENCE, combined by LSE.
+
+When kv_heads < TP (most GQA archs at TP=16), the KV cache cannot shard on
+heads; sharding the cache's sequence axis instead gives flash-decoding
+semantics: every shard computes attention over its local window plus a
+log-sum-exp, and windows combine exactly:
+
+    out = sum_i exp(lse_i - lse) * out_i,   lse = logsumexp_i(lse_i)
+
+One tiny all-reduce of (B, H) lse + one of (B, H, D) weighted sums per
+layer — vs all-gathering the (B, S, KV, D) cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.attention import _out_proj, _project_qkv, decode_attention
+
+__all__ = ["sharded_decode_attention"]
+
+
+def sharded_decode_attention(
+    params, cfg, mesh: Mesh, x, cache_k, cache_v, pos, *, seq_axis: str = "model"
+):
+    """decode_attention with cache sharded on sequence over ``seq_axis``.
+
+    x replicated over seq_axis; caches sharded P(None, seq_axis, ...).
+    Returns (out, new_k, new_v) matching the unsharded semantics exactly
+    (validated in tests/test_distributed.py).
+    """
+    n_shards = mesh.shape[seq_axis]
+    s_local = cache_k.shape[1] // n_shards
+
+    def local_fn(x_l, k_l, v_l, pos_l):
+        shard = jax.lax.axis_index(seq_axis)
+        offset = shard * s_local
+        # the global write position falls in this shard iff
+        # offset <= pos < offset + s_local
+        local_pos = jnp.clip(pos_l - offset, 0, s_local - 1)
+        in_shard = (pos_l >= offset) & (pos_l < offset + s_local)
+        b = x_l.shape[0]
+
+        # per-shard cache write: only the owning shard commits the new K/V,
+        # roped at the GLOBAL position
+        q, k_new, v_new = _project_qkv(params, cfg, x_l, positions=pos_l[:, None])
+        bidx = jnp.arange(b)
+        k_upd = k_l.at[bidx, local_pos].set(
+            jnp.where(in_shard[:, None, None], k_new[:, 0].astype(k_l.dtype), k_l[bidx, local_pos])
+        )
+        v_upd = v_l.at[bidx, local_pos].set(
+            jnp.where(in_shard[:, None, None], v_new[:, 0].astype(v_l.dtype), v_l[bidx, local_pos])
+        )
+        # local partial attention over this shard's window: mask with the
+        # LOCAL window validity, rope the query at the GLOBAL position
+        mask_pos = jnp.where(
+            in_shard, local_pos,
+            jnp.where(pos_l >= offset + s_local, s_local - 1, -1),
+        )
+        num, lse, _, _ = decode_attention(
+            params, cfg, x_l, k_upd, v_upd, mask_pos,
+            update_cache=False, lse_partial=True, rope_pos=pos_l,
+        )
+        # exact flash-decoding combine across shards
+        lse_max = jax.lax.pmax(lse, seq_axis)
+        w = jnp.exp(lse - lse_max)
+        num_g = jax.lax.psum(num * w[..., None], seq_axis)
+        den_g = jax.lax.psum(w, seq_axis)
+        out = num_g / jnp.maximum(den_g, 1e-30)[..., None]
+        return _out_proj(params, out.astype(x_l.dtype)), k_upd, v_upd
+
+    spec_x = P(None, None, None)
+    spec_cache = P(None, seq_axis, None, None)
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_x, spec_cache, spec_cache, P(None)),
+        out_specs=(spec_x, spec_cache, spec_cache),
+        check_rep=False,
+    )
+    return fn(x, cache_k, cache_v, pos)

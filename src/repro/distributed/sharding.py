@@ -1,0 +1,267 @@
+"""Sharding rules: DP over (pod, data), TP/EP over model, SP for decode caches.
+
+Rules are name-based over the param pytree (leading layer-stack axes are
+handled by left-padding the PartitionSpec).  Conservative divisibility
+guards: a dimension is sharded on ``model`` only if it is divisible by the
+axis size OR is a head axis with >= axis-size heads (GSPMD pads unevenly);
+otherwise it is replicated — never an invalid sharding at lower time.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "param_shardings",
+    "batch_shardings",
+    "decode_state_shardings",
+    "train_state_shardings",
+]
+
+
+def _ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _model_ok(dim: int, mesh: Mesh) -> bool:
+    return dim % mesh.shape["model"] == 0
+
+
+def _leaf_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh):
+    """Trailing-dims PartitionSpec for one parameter leaf.
+
+    Preference order for attention/embedding weights:
+      1. head/vocab axis sharding (clean Megatron TP, no weight comms);
+      2. FSDP-style sharding of a divisible non-head axis (params stored
+         sharded; GSPMD all-gathers the weight per use — right trade when
+         activations >> weights or dims don't divide);
+      3. replicate.
+    """
+    tp = mesh.shape["model"]
+    nd = leaf.ndim
+
+    def pad(spec: tuple, target_nd: int) -> P:
+        return P(*((None,) * (target_nd - len(spec)) + spec))
+
+    # Embeddings / LM head: vocab-shard, else d-shard (odd vocab sizes).
+    if path.endswith("emb"):
+        if _model_ok(leaf.shape[0], mesh):
+            return P("model", None)
+        if _model_ok(leaf.shape[1], mesh):
+            return P(None, "model")
+        return P(None, None)
+    # Attention (3D head-structured).  When the head count does not divide
+    # TP, REPLICATE on the model axis (the data-axis FSDP pass below still
+    # shards storage) — model-axis sharding of the d dim was measured to
+    # emit per-layer activation all-gathers + per-microbatch dW reductions
+    # (§Perf iteration 7 on qwen3: kv=4 < tp=16).
+    if "/attn/" in path or path.startswith("attn/"):
+        if path.endswith("wq") or path.endswith("wk") or path.endswith("wv"):
+            h = leaf.shape[-2]
+            if _model_ok(h, mesh):
+                return pad((None, "model", None), nd)
+            return pad((None, None, None), nd)
+        if path.endswith("wo"):
+            h = leaf.shape[-3]
+            if _model_ok(h, mesh):
+                return pad(("model", None, None), nd)
+            return pad((None, None, None), nd)
+    # Dense / shared-block SwiGLU.
+    if path.endswith("w_gate") or path.endswith("w_up"):
+        if leaf.ndim >= 3 and cfg.is_moe and "ffn" in path:
+            # MoE stacked experts: (L, E, d, ff) -> shard E
+            return pad(("model", None, None), nd)
+        return pad((None, "model" if _model_ok(leaf.shape[-1], mesh) else None), nd)
+    if path.endswith("w_down"):
+        if leaf.ndim >= 3 and cfg.is_moe and "ffn" in path:
+            return pad(("model", None, None), nd)
+        return pad(("model" if _model_ok(leaf.shape[-2], mesh) else None, None), nd)
+    if path.endswith("router"):
+        return pad((None, None), nd)
+    # RWKV channel mix: shard the ff dimension.
+    if path.endswith("/ck"):
+        return pad((None, "model" if _model_ok(leaf.shape[-1], mesh) else None), nd)
+    if path.endswith("/cv"):
+        return pad(("model" if _model_ok(leaf.shape[-2], mesh) else None, None), nd)
+    # Everything else (norms, mamba, rwkv time-mix, conv, scalars): replicated.
+    return P(*((None,) * nd))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(
+    params_shape, cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True, layout: str | None = None
+):
+    """NamedSharding pytree matching the params pytree (shapes or arrays).
+
+    layout "2d" (default): TP/EP rules over 'model' + FSDP of the largest
+    remaining divisible dim over (pod, data) — the MaxText/PaLM production
+    default.  layout "dp_only": no tensor parallelism; FSDP over ALL mesh
+    axes (small models — see distributed.layout)."""
+    from repro.distributed.layout import get_layout
+
+    layout = layout or get_layout()
+    if layout == "dp_only":
+        dp = tuple(mesh.axis_names)
+    else:
+        dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def assign(kp, leaf):
+        if layout == "dp_only":
+            spec = [None] * leaf.ndim
+        else:
+            spec = list(_leaf_spec(_path_str(kp), leaf, cfg, mesh))
+            spec += [None] * (leaf.ndim - len(spec))
+        if fsdp and leaf.ndim >= 2:
+            # shard the largest still-unsharded divisible dim over dp axes
+            cands = [
+                (leaf.shape[i], i)
+                for i in range(leaf.ndim)
+                if spec[i] is None and leaf.shape[i] % dp_size == 0 and leaf.shape[i] >= dp_size
+            ]
+            if cands:
+                _, i = max(cands)
+                spec[i] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_shardings(batch_shape, cfg: ModelConfig, mesh: Mesh, *, layout: str | None = None):
+    """Inputs: batch dim over the layout's data axes when divisible.
+
+    dp_only tries (pod, data, model) first, falling back to narrower axis
+    sets until the batch divides evenly; else replicated."""
+    from repro.distributed.layout import get_layout
+
+    layout = layout or get_layout()
+    candidates = (
+        [tuple(mesh.axis_names), data_axes(mesh)] if layout == "dp_only" else [data_axes(mesh)]
+    )
+
+    def assign(kp, leaf):
+        if leaf.ndim == 0:
+            return _ns(mesh)
+        for dp in candidates:
+            size = 1
+            for a in dp:
+                size *= mesh.shape[a]
+            if leaf.shape[0] % size == 0:
+                return NamedSharding(mesh, P(dp, *((None,) * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+
+def decode_state_shardings(state_shape, cfg: ModelConfig, mesh: Mesh):
+    """KV caches / SSM states.
+
+    Batch over (pod, data) when divisible; KV heads over model when
+    divisible, else cache SEQUENCE over model (context-parallel decode —
+    the lse-combine in distributed/decode.py makes this exact).
+    long_500k (batch=1): batch replicated, sequence over model (+data via
+    the dedicated context-parallel path).
+    """
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp = mesh.shape["model"]
+
+    def assign(kp, leaf):
+        path = _path_str(kp)
+        if leaf.ndim == 0:
+            return _ns(mesh)
+        batch_ok = None
+        if path in ("k", "v", "cross_k", "cross_v") or path.startswith("shared_"):
+            # (L|G, B, S, KV, D)
+            b, s, kv = leaf.shape[1], leaf.shape[2], leaf.shape[3]
+            bspec = dp if b % dp_size == 0 else None
+            if kv % tp == 0:
+                return NamedSharding(mesh, P(None, bspec, None, "model", None))
+            if s % tp == 0:
+                return NamedSharding(mesh, P(None, bspec, "model", None, None))
+            return NamedSharding(mesh, P(None, bspec, None, None, None))
+        if path == "wkv":  # (L, B, H, hd_k, hd_v)
+            b, h, hdk = leaf.shape[1], leaf.shape[2], leaf.shape[3]
+            bspec = dp if b % dp_size == 0 else None
+            if h % tp == 0:
+                return NamedSharding(mesh, P(None, bspec, "model", None, None))
+            if hdk % tp == 0:  # key-dim sharding (heads don't divide)
+                return NamedSharding(mesh, P(None, bspec, None, "model", None))
+            return NamedSharding(mesh, P(None, bspec, None, None, None))
+        if path == "h":  # mamba (L, B, nh, hd, ds)
+            b, nh = leaf.shape[1], leaf.shape[2]
+            bspec = dp if b % dp_size == 0 else None
+            hspec = "model" if nh % tp == 0 else None
+            return NamedSharding(mesh, P(None, bspec, hspec, None, None))
+        if path in ("conv_buf", "x_prev_t", "x_prev_c"):
+            b = leaf.shape[1]
+            bspec = dp if b % dp_size == 0 else None
+            return NamedSharding(mesh, P(None, bspec, *((None,) * (leaf.ndim - 2))))
+        # fallback: batch-first if divisible
+        if leaf.shape[0] % dp_size == 0:
+            return NamedSharding(mesh, P(dp, *((None,) * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def train_state_shardings(state_shape, cfg: ModelConfig, mesh: Mesh, *, zero1: bool = False):
+    """Train state = {params, opt moments, scalars}: params-like leaves use
+    param rules; ZeRO-1 additionally shards optimizer moments over data."""
+    p_sh = param_shardings(state_shape["params"], cfg, mesh)
+    out: dict[str, Any] = {"params": p_sh}
+    for key, sub in state_shape.items():
+        if key == "params":
+            continue
+        if key in ("m", "v"):  # Adam moments, params-shaped
+            if zero1:
+                out[key] = _zero1_shardings(sub, cfg, mesh)
+            else:
+                out[key] = param_shardings(sub, cfg, mesh)
+        else:
+            out[key] = jax.tree_util.tree_map(
+                lambda leaf: NamedSharding(mesh, P(*((None,) * getattr(leaf, "ndim", 0)))), sub
+            )
+    return out
+
+
+def _zero1_shardings(params_shape, cfg: ModelConfig, mesh: Mesh):
+    """ZeRO-1: moments additionally sharded over the data axis on their
+    largest divisible dimension (beyond-paper memory optimization)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    base = param_shardings(params_shape, cfg, mesh)
+
+    def upgrade(leaf, sh):
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        for i in range(leaf.ndim):
+            if spec[i] is None and leaf.shape[i] % dp_size == 0:
+                spec[i] = dp
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(upgrade, params_shape, base)

@@ -1,0 +1,98 @@
+"""Pallas TPU flash-attention forward kernel.
+
+The VMEM-resident counterpart of models.attention._blocked_attention: one
+grid step owns one (batch·head, q-block) pair; the online-softmax loop over
+KV blocks runs INSIDE the kernel, so score/probability blocks never touch
+HBM — the traffic that dominates the XLA-level memory term of every
+attention cell in EXPERIMENTS.md §Roofline (the §Perf substitution).
+
+Layout: q (BH, S, D) with K/V whole per (b,h) in VMEM — at 32k, D=128,
+bf16 that is 8 MB for K + 8 MB for V, comfortably inside 128 MB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, *, block_kv: int, causal: bool, seq_len: int,
+    valid_len: int,
+):
+    qi = pl.program_id(1)
+    bq = q_ref.shape[1]
+    d = q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    scale = d**-0.5
+
+    n_kv = seq_len // block_kv
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(ki * block_kv, block_kv), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * block_kv, block_kv), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (bq, block_kv), 1)
+        mask = kpos < valid_len  # padded K rows never receive weight
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_kv), 0)
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    # causal: kv blocks beyond this q block contribute nothing — bound the loop
+    upper = n_kv if not causal else jnp.minimum(n_kv, (qi + 1) * bq // block_kv + 1)
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_kv", "causal", "interpret", "valid_len")
+)
+def flash_attention_fwd(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, S, D)
+    v: jax.Array,
+    *,
+    block_q: int = 512,
+    block_kv: int = 512,
+    causal: bool = True,
+    interpret: bool = False,
+    valid_len: int | None = None,
+) -> jax.Array:
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    grid = (bh, s // block_q)
+    kernel = functools.partial(
+        _kernel, block_kv=block_kv, causal=causal, seq_len=s,
+        valid_len=s if valid_len is None else valid_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

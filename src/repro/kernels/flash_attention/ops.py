@@ -1,0 +1,52 @@
+"""jit wrapper: GQA repeat + padding + (B,S,H,D) <-> (BH,S,D) plumbing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    bq = min(block_q, s)
+    bkv = min(block_kv, s)
+    pad = (-s) % max(bq, bkv)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sp, d)
+    # padded tail rows only ever attend within the causal prefix; for
+    # non-causal, mask by zeroing padded K rows' contribution via -inf trick
+    # handled in kernel through causal bound; safe because outputs at
+    # padded positions are sliced away below and padded K/V are zeros.
+    of = flash_attention_fwd(
+        qf, kf, vf, block_q=bq, block_kv=bkv, causal=causal, interpret=interpret,
+        valid_len=s,
+    )
+    out = of.reshape(b, h, sp, d).transpose(0, 2, 1, 3)
+    return out[:, :s]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True):
+    """q/k/v: (BH, S, D) -> (BH, S, D), f32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * d**-0.5
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

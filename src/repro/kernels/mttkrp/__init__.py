@@ -1,0 +1,3 @@
+from repro.kernels.mttkrp.ops import get_plan, mttkrp_pallas, mttkrp_pallas_from_plan
+
+__all__ = ["mttkrp_pallas", "mttkrp_pallas_from_plan", "get_plan"]

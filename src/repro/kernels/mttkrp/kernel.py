@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for mode-ordered sparse MTTKRP.
+
+TPU-native translation of the paper's accelerator datapath (DESIGN.md §2):
+
+  * the *O-SRAM partial-sum buffer* becomes a VMEM output block revisited
+    across consecutive grid steps (legal because the plan sorts nonzeros by
+    output mode — the paper's Algorithm 1 ordering);
+  * the *cache subsystem* becomes pre-staged factor rows delivered tile-by-
+    tile through the Pallas grid pipeline (automatic HBM→VMEM double
+    buffering takes the role of the DMA stream units);
+  * the *scatter-accumulate* becomes a one-hot ⋅ MXU matmul
+    ``A_blk += onehot(local_row) @ (vals · ∘_k F_k[rows])`` — the irregular
+    write pattern is converted into systolic compute, which is the TPU
+    replacement for the 200-port concurrent O-SRAM write.
+
+Grid: one step per nonzero tile.  Scalar-prefetched ``tile_block`` drives
+the output BlockSpec index map, so each grid step lands on the VMEM block
+holding its output rows; first-visit predication zero-initializes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128  # TPU lane width — rank is padded to this
+SUBLANE = 8
+
+
+def _kernel(tile_block_ref, vals_ref, local_ref, fac_ref, out_ref, *, nfac: int):
+    t = pl.program_id(0)
+    blk = tile_block_ref[t]
+    # t==0 short-circuits the (wrapping) t-1 load — first tile always inits.
+    first = jnp.logical_or(t == 0, blk != tile_block_ref[t - 1])
+
+    acc_t = jnp.float32
+    prod = fac_ref[0].astype(acc_t)
+    for k in range(1, nfac):
+        prod = prod * fac_ref[k].astype(acc_t)
+    prod = prod * vals_ref[...].astype(acc_t)[:, None]
+
+    rows_per_block = out_ref.shape[0]
+    tile_nnz = prod.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (rows_per_block, tile_nnz), 0)
+    onehot = (row_iota == local_ref[...][None, :]).astype(acc_t)
+    contrib = jnp.dot(onehot, prod, preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tile_nnz", "rows_per_block", "num_blocks", "interpret"),
+)
+def mttkrp_pallas_call(
+    tile_block: jax.Array,  # (num_tiles,) int32, non-decreasing
+    values: jax.Array,  # (nnz_pad,)
+    local_row: jax.Array,  # (nnz_pad,) int32 in [0, rows_per_block)
+    gathered: jax.Array,  # (K, nnz_pad, R_pad)
+    *,
+    tile_nnz: int,
+    rows_per_block: int,
+    num_blocks: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (num_blocks * rows_per_block, R_pad) float32 partial-sum grid."""
+    nfac, nnz_pad, r_pad = gathered.shape
+    assert nnz_pad % tile_nnz == 0, (nnz_pad, tile_nnz)
+    num_tiles = nnz_pad // tile_nnz
+    assert tile_block.shape == (num_tiles,), (tile_block.shape, num_tiles)
+    assert r_pad % LANE == 0, r_pad
+    assert rows_per_block % SUBLANE == 0, rows_per_block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_nnz,), lambda t, tb: (t,)),
+            pl.BlockSpec((tile_nnz,), lambda t, tb: (t,)),
+            pl.BlockSpec((nfac, tile_nnz, r_pad), lambda t, tb: (0, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+    )
+    out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
+    kernel = functools.partial(_kernel, nfac=nfac)
+    try:
+        compiler_params = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    except AttributeError:  # older jax spelling
+        compiler_params = pltpu.TPUCompilerParams(dimension_semantics=("arbitrary",))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(tile_block, values, local_row, gathered)

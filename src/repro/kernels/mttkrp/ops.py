@@ -1,0 +1,104 @@
+"""jit'd wrapper around the Pallas spMTTKRP kernel.
+
+Responsibilities split exactly as the paper splits them:
+  * host-side, once per (tensor, mode): the mode-ordered linearization
+    (core.sparse_tensor.build_mttkrp_plan) — the paper's per-mode memory
+    mapping, amortized over all CP-ALS iterations;
+  * device-side, per call: gather factor rows (TPU DMA engine), run the
+    kernel, slice off block padding and lane padding.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse_tensor import MTTKRPPlan, SparseTensor, build_mttkrp_plan
+from repro.kernels.mttkrp.kernel import LANE, mttkrp_pallas_call
+
+# Plan cache: keyed by id() BUT each entry holds a strong reference to its
+# tensor and verifies identity on lookup — a bare id() key is unsound
+# because CPython recycles ids after GC (caused intermittent stale-plan
+# NaNs in the hypothesis sweep).
+_PLAN_CACHE: dict[tuple[int, int, int, int], tuple[SparseTensor, MTTKRPPlan]] = {}
+_PLAN_CACHE_MAX = 64
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def get_plan(
+    tensor: SparseTensor, mode: int, *, tile_nnz: int = 256, rows_per_block: int = 256
+) -> MTTKRPPlan:
+    key = (id(tensor), mode, tile_nnz, rows_per_block)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0] is tensor:
+        return hit[1]
+    plan = build_mttkrp_plan(
+        tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block
+    )
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.clear()
+    _PLAN_CACHE[key] = (tensor, plan)
+    return plan
+
+
+def mttkrp_pallas(
+    tensor: SparseTensor,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    plan: MTTKRPPlan | None = None,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MTTKRP for ``mode`` via the Pallas kernel.  Returns (I_mode, R)."""
+    if plan is None:
+        plan = get_plan(tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block)
+    if interpret is None:
+        interpret = _default_interpret()
+
+    rank = factors[0].shape[1]
+    r_pad = -(-rank // LANE) * LANE
+    idx = jnp.asarray(plan.sorted_indices)
+    vals = jnp.asarray(plan.sorted_values)
+    local = jnp.asarray(plan.local_row)
+    tile_block = jnp.asarray(plan.tile_block)
+
+    other = [k for k in range(len(factors)) if k != mode]
+    gathered = jnp.stack(
+        [jnp.take(factors[k], idx[:, k], axis=0) for k in other]
+    )  # (K, nnz_pad, R)
+    if r_pad != rank:
+        gathered = jnp.pad(gathered, ((0, 0), (0, 0), (0, r_pad - rank)))
+
+    out = mttkrp_pallas_call(
+        tile_block,
+        vals,
+        local,
+        gathered,
+        tile_nnz=plan.tile_nnz,
+        rows_per_block=plan.rows_per_block,
+        num_blocks=plan.num_blocks,
+        interpret=interpret,
+    )
+    i_out = tensor.shape[mode]
+    return out[:i_out, :rank].astype(factors[mode].dtype)
+
+
+def mttkrp_pallas_from_plan(
+    plan: MTTKRPPlan,
+    factors: Sequence[jax.Array],
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Same as above when the caller already holds the plan (distributed path)."""
+    dummy = SparseTensor(
+        np.zeros((1, len(plan.shape)), np.int32), np.zeros((1,), np.float32), plan.shape
+    )
+    return mttkrp_pallas(dummy, factors, plan.mode, plan=plan, interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Pallas spMTTKRP kernel.
+
+Operates on the *same plan-preprocessed arrays* the kernel consumes, so a
+mismatch isolates kernel bugs from preprocessing bugs; a second entry point
+checks plan preprocessing against the raw-COO reference in core.mttkrp.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_tensor import MTTKRPPlan
+
+
+def mttkrp_plan_ref(
+    plan: MTTKRPPlan,
+    values: jax.Array,  # (nnz_pad,)
+    gathered: jax.Array,  # (K, nnz_pad, R) pre-gathered non-output factor rows
+    *,
+    out_rows: int,
+) -> jax.Array:
+    """Segment-sum oracle over the padded, mode-sorted nonzeros."""
+    acc = jnp.promote_types(values.dtype, jnp.float32)
+    prod = jnp.prod(gathered.astype(acc), axis=0) * values.astype(acc)[:, None]
+    seg = jnp.asarray(plan.sorted_indices[:, plan.mode])
+    out = jax.ops.segment_sum(prod, seg, num_segments=plan.num_blocks * plan.rows_per_block)
+    return out[:out_rows]
+
+
+def gather_factor_rows(
+    plan: MTTKRPPlan, factors: Sequence[jax.Array]
+) -> jax.Array:
+    """(K, nnz_pad, R) rows of every non-output factor at the plan's order."""
+    idx = jnp.asarray(plan.sorted_indices)
+    mats = [factors[k] for k in range(len(factors)) if k != plan.mode]
+    cols = [c for c in range(len(factors)) if c != plan.mode]
+    return jnp.stack([jnp.take(m, idx[:, c], axis=0) for m, c in zip(mats, cols)])

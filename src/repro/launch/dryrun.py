@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (assignment MULTI-POD DRY-RUN steps 0-4).
+
+For every (architecture x applicable shape x mesh) cell:
+  jax.jit(step_fn, in_shardings, out_shardings).lower(**input_specs)
+  -> .compile() must SUCCEED on the (16,16) single-pod mesh AND the
+  (2,16,16) multi-pod mesh; memory_analysis() and cost_analysis() are
+  recorded to results/dryrun/<cell>.json for §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.configs.shapes import SHAPES, applicable_shapes
+from repro.distributed.sharding import (
+    batch_shardings,
+    decode_state_shardings,
+    param_shardings,
+    train_state_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import (
+    init_decode_state,
+    init_model,
+    input_specs,
+    make_decode_fn,
+    make_prefill_fn,
+    make_train_step,
+)
+from repro.perf.hlo_cost import analyze_hlo
+from repro.perf.hlo_stats import CollectiveStats
+from repro.perf.roofline import model_flops_for, roofline_from_stats
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _replicated(mesh, tree):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P(*((None,) * getattr(leaf, "ndim", 0)))), tree
+    )
+
+
+def default_microbatches(cfg, spec, *, dp_size: int, target_bytes: float = 2.5 * 2**30) -> int:
+    """Microbatch count bounding per-chip remat residuals (~L*b*S*d bf16)."""
+    b_local = max(1, spec.global_batch // dp_size)
+    resid = cfg.num_layers * b_local * spec.seq_len * cfg.d_model * 2
+    n = 1
+    max_n = spec.global_batch // dp_size if spec.global_batch >= dp_size else 1
+    while n < max_n and resid / n > target_bytes:
+        n *= 2
+    return max(1, min(n, max_n))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, extra_tag: str = ""):
+    """Lower + compile one cell; returns the result record dict."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    app = applicable_shapes(cfg)[shape_name]
+    if isinstance(app, str):
+        return {"arch": arch, "shape": shape_name, "status": "skip", "reason": app}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+
+    from repro.distributed.layout import layout_scope, pick_layout
+
+    layout = pick_layout(cfg, spec.kind)
+
+    batch_sds = input_specs(cfg, spec)
+    params_sds = jax.eval_shape(functools.partial(init_model, cfg), jax.random.PRNGKey(0))
+    if spec.kind in ("prefill", "decode"):
+        # Serving: bf16 params; FSDP over data only when a bf16 TP shard
+        # would not fit HBM (qwen3-class) — otherwise data-replicated
+        # weights avoid the per-layer weight all-gathers entirely.
+        params_sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), params_sds
+        )
+        tp = mesh.shape["model"]
+        fsdp = cfg.param_count() * 2 / tp > 12 * 2**30
+        p_shard = param_shardings(params_sds, cfg, mesh, fsdp=fsdp)
+    else:
+        p_shard = param_shardings(params_sds, cfg, mesh)
+
+    n_ub = 1
+    t0 = time.time()
+    import contextlib
+
+    with mesh, layout_scope(layout):
+        if spec.kind == "train":
+            from repro.distributed.sharding import train_state_shardings as tss
+            from repro.optim.adamw import AdamW, init_adamw_state
+
+            state_sds = jax.eval_shape(
+                functools.partial(init_adamw_state, lr=3e-4), params_sds
+            )
+            state_shard = tss(state_sds, cfg, mesh)
+            b_shard = batch_shardings(batch_sds, cfg, mesh)
+            dp_size = chips if layout == "dp_only" else chips // mesh.shape["model"]
+            n_ub = default_microbatches(cfg, spec, dp_size=dp_size)
+            step = make_train_step(cfg, AdamW(), num_microbatches=n_ub)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_sds, batch_sds)
+        elif spec.kind == "prefill":
+            b_shard = batch_shardings(batch_sds, cfg, mesh)
+            fn = make_prefill_fn(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            state_sds = batch_sds["state"]
+            tok_sds = batch_sds["tokens"]
+            s_shard = decode_state_shardings(state_sds, cfg, mesh)
+            b_shard = batch_shardings({"tokens": tok_sds}, cfg, mesh)["tokens"]
+            fn = make_decode_fn(cfg)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, b_shard, s_shard),
+                out_shardings=(None, s_shard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_sds, tok_sds, state_sds)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # Trip-count-aware reconstruction (cost_analysis counts while bodies
+    # once; our models are scan-based, so that undercounts by ~num_layers).
+    hc = analyze_hlo(hlo)
+    coll = CollectiveStats(
+        counts={k: int(v) for k, v in hc.coll_counts.items()},
+        result_bytes=dict(hc.coll_bytes),
+        ici_bytes_per_chip=hc.ici_bytes,
+        total_result_bytes=float(sum(hc.coll_bytes.values())),
+    )
+    cell = roofline_from_stats(
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        chips=chips,
+        cost={"flops": hc.flops, "bytes accessed": hc.bytes},
+        coll=coll,
+        model_flops=model_flops_for(cfg, spec),
+        peak_bytes=_mem_total(mem),
+    )
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": extra_tag,
+        "status": "ok",
+        "chips": chips,
+        "num_microbatches": n_ub,
+        "layout": layout,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": _mem_dict(mem),
+        "flops_per_chip": cell.hlo_flops,
+        "bytes_per_chip": cell.hlo_bytes,
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "unknown_trip_whiles": hc.unknown_trip_whiles,
+        "collectives": {
+            "counts": coll.counts,
+            "result_bytes": coll.result_bytes,
+            "ici_bytes_per_chip": coll.ici_bytes_per_chip,
+        },
+        "roofline": cell.row(),
+    }
+    return record
+
+
+def _mem_total(mem) -> float:
+    try:
+        return float(
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+        )
+    except Exception:
+        return 0.0
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for name in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        try:
+            out[name] = int(getattr(mem, name))
+        except Exception:
+            pass
+    return out
+
+
+def run_and_save(arch: str, shape_name: str, *, multi_pod: bool) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}.json"
+    (RESULTS_DIR / fname).write_text(json.dumps(rec, indent=2, default=float))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (
+            f" compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms"
+            f" coll={r['collective_s']*1e3:.2f}ms dom={r['dominant']}"
+            f" (lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+        )
+    elif status == "error":
+        extra = " " + rec["error"][:200]
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {status}{extra}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), help="one architecture")
+    ap.add_argument("--shape", choices=sorted(SHAPES), help="one shape")
+    ap.add_argument("--all", action="store_true", help="sweep all cells")
+    ap.add_argument("--multi-pod", action="store_true", help="use the (2,16,16) mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = sorted(ARCHITECTURES) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES) if args.all or not args.shape else [args.shape]
+
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_and_save(arch, shape, multi_pod=mp)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that carry the batch / gradient reduction (pod composes with data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

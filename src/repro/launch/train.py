@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant loop (runtime.train_loop) on a reduced or full
+config.  On this CPU container use --reduced; on a real TPU slice the same
+entry point runs the full config under the production mesh with the same
+shardings the dry-run validated.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHITECTURES, get_config, reduced_config
+from repro.data.lm_data import SyntheticLMStream
+from repro.optim.adamw import AdamW
+from repro.optim.grad_compress import Int8ErrorFeedback
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", help="CPU-sized config")
+    ap.add_argument("--d-model", type=int, default=None, help="override width (reduced)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.reduced:
+        over = {}
+        if args.d_model:
+            h = max(2, args.d_model // 64)
+            over.update(d_model=args.d_model, num_heads=h, num_kv_heads=min(h, 8),
+                        head_dim=args.d_model // h, d_ff=args.d_model * 3)
+        if args.layers:
+            over["num_layers"] = args.layers
+        cfg = reduced_config(args.arch, **over)
+    else:
+        cfg = get_config(args.arch)
+    print(f"[train] arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"(active {cfg.active_param_count()/1e6:.1f}M)")
+
+    stream = SyntheticLMStream(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len, global_batch=args.batch
+    )
+    opt = AdamW(
+        schedule=warmup_cosine(min(20, args.steps // 5 + 1), args.steps),
+        compressor=Int8ErrorFeedback() if args.compress_grads else None,
+    )
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        save_every=args.save_every,
+        checkpoint_dir=args.checkpoint_dir,
+        lr=args.lr,
+        num_microbatches=args.microbatches,
+    )
+    res = train(cfg, loop, stream=stream, optimizer=opt)
+    print(f"[train] done: final loss {res['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,378 @@
+"""GQA attention: dense, blocked (online-softmax), and KV-cache decode paths.
+
+The blocked path is the default for long sequences: it never materializes
+the (S x S) score matrix — an online-softmax accumulation over KV blocks
+inside a scan over Q blocks, which is what lets the 32k/500k shapes lower
+with bounded per-step buffers.  (The Pallas flash-attention kernel in
+kernels/flash_attention is the TPU-native version of the same schedule;
+the lax.scan form is used in the portable dry-run path.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    apply_rope,
+    dense,
+    head_shard,
+    init_dense,
+    rope_frequencies,
+)
+
+__all__ = ["init_attention", "attention", "decode_attention", "AttnParams"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, *, d_model: int | None = None):
+    """Head-structured weights: wq (d, H, hd), wk/wv (d, KV, hd), wo (H, hd, d).
+
+    Keeping the head axis explicit (instead of a flattened d x H*hd matrix)
+    lets the mesh 'model' axis shard on head boundaries, which GSPMD
+    propagates through the attention einsums without reshuffling."""
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    scale = d**-0.5
+    pd = cfg.param_dtype
+
+    def w(key, shape, s=scale):
+        return (jax.random.normal(key, shape) * s).astype(pd)
+
+    return {
+        "wq": w(kq, (d, cfg.num_heads, hd)),
+        "wk": w(kk, (d, cfg.num_kv_heads, hd)),
+        "wv": w(kv, (d, cfg.num_kv_heads, hd)),
+        "wo": w(ko, (cfg.num_heads, hd, d), s=(cfg.num_heads * hd) ** -0.5),
+    }
+
+
+def _out_proj(params, out):
+    """out: (B, S, H, hd) -> (B, S, d)."""
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(out.dtype))
+
+
+def _project_qkv(params, cfg, x, *, positions=None, rope=True):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if rope:
+        if positions is None:
+            positions = jnp.arange(s)
+        cos, sin = rope_frequencies(hd, positions, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, h: int) -> jax.Array:
+    """(B,S,KV,D) -> (B,S,H,D).  The repeat keeps the head axis whole, so a
+    head-sharded mesh axis propagates through the attention einsums without
+    the reshard a (KV, G) reshape would trigger (GSPMD cannot split one
+    mesh axis across two tensor dims)."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    return jnp.repeat(k, h // kvh, axis=2)
+
+
+def _dense_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Materializing path for short sequences.  q:(B,S,H,D) k/v:(B,Skv,KV,D)."""
+    b, s, h, d = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores *= d**-0.5
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def _pad_blocks(q, k, v, block_q, block_kv):
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    bq = min(block_q, s)
+    bkv = min(block_kv, skv)
+    s_pad = -(-s // bq) * bq
+    skv_pad = -(-skv // bkv) * bkv
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0), (0, 0)))
+    nq, nkv = s_pad // bq, skv_pad // bkv
+    qb = qp.reshape(b, nq, bq, h, d).transpose(1, 0, 2, 3, 4)  # (nq,b,bq,h,d)
+    kb = kp.reshape(b, nkv, bkv, kvh, d).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nkv, bkv, kvh, d).transpose(1, 0, 2, 3, 4)
+    kv_valid = (jnp.arange(skv_pad) < skv).reshape(nkv, bkv)
+    return qb, kb, vb, kv_valid, (bq, bkv, nq, nkv, s_pad, skv_pad)
+
+
+def _block_scores(qblk, kr, qi, ki, bq, bkv, valid, causal, scale):
+    """f32 masked scores for one (q block, kv block) pair."""
+    sc = jnp.einsum("bqhd,bthd->bhqt", qblk, kr).astype(jnp.float32) * scale
+    mask = valid[None, None, None, :]
+    if causal:
+        qpos = qi * bq + jnp.arange(bq)
+        kpos = ki * bkv + jnp.arange(bkv)
+        mask = mask & (qpos[:, None] >= kpos[None, :])[None, None]
+    return jnp.where(mask, sc, NEG_INF)
+
+
+def _blocked_fwd_impl(q, k, v, causal, block_q, block_kv):
+    """Returns (out (b,s,h,d), lse (nq,b,h,bq)) without materializing S^2."""
+    b, s, h, d = q.shape
+    qb, kb, vb, kv_valid, (bq, bkv, nq, nkv, s_pad, _) = _pad_blocks(
+        q, k, v, block_q, block_kv
+    )
+    scale = d**-0.5
+
+    def q_step(_, q_in):
+        qblk, qi = q_in
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kblk, vblk, valid, ki = kv_in
+            kr = _repeat_kv(kblk, h)
+            vr = _repeat_kv(vblk, h)
+            sc = _block_scores(qblk, kr, qi, ki, bq, bkv, valid, causal, scale)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqt,bthd->bhqd", p.astype(qblk.dtype), vr
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = head_shard(jnp.full((b, h, bq), NEG_INF, jnp.float32), 1)
+        l0 = head_shard(jnp.zeros((b, h, bq), jnp.float32), 1)
+        a0 = head_shard(jnp.zeros((b, h, bq, d), jnp.float32), 1)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, kv_valid, jnp.arange(nkv))
+        )
+        out_blk = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out_blk, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s_pad, h, d)[:, :s]
+    return out, lses  # lses: (nq, b, h, bq)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _blocked_attention(q, k, v, causal: bool, block_q: int, block_kv: int):
+    """Flash-attention-style blocked attention with a recomputing backward.
+
+    Plain autodiff through the fwd scans would stack per-block scores as
+    scan residuals — the full S^2 matrix (gigabytes/layer at 32k).  The
+    custom VJP saves only (q, k, v, out, lse) and recomputes each score
+    block in the backward, exactly like the FlashAttention schedule."""
+    out, _ = _blocked_fwd_impl(q, k, v, causal, block_q, block_kv)
+    return out
+
+
+def _blocked_attention_fwd(q, k, v, causal, block_q, block_kv):
+    out, lses = _blocked_fwd_impl(q, k, v, causal, block_q, block_kv)
+    return out, (q, k, v, out, lses)
+
+
+def _blocked_attention_bwd(causal, block_q, block_kv, res, dout):
+    q, k, v, out, lses = res
+    b, s, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qb, kb, vb, kv_valid, (bq, bkv, nq, nkv, s_pad, skv_pad) = _pad_blocks(
+        q, k, v, block_q, block_kv
+    )
+    scale = d**-0.5
+    dout_p = jnp.pad(dout, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    out_p = jnp.pad(out, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    dob = dout_p.reshape(b, nq, bq, h, d).transpose(1, 0, 2, 3, 4)
+    # delta = rowsum(dout * out): (nq, b, h, bq)
+    delta = jnp.einsum(
+        "bshd,bshd->bsh", dout_p.astype(jnp.float32), out_p.astype(jnp.float32)
+    ).reshape(b, nq, bq, h).transpose(1, 0, 3, 2)
+
+    # --- dq: scan q blocks, inner scan kv (same order as fwd) --------------
+    def dq_step(_, q_in):
+        qblk, doblk, lse, dl, qi = q_in
+
+        def kv_step(dq_acc, kv_in):
+            kblk, vblk, valid, ki = kv_in
+            kr = _repeat_kv(kblk, h)
+            vr = _repeat_kv(vblk, h)
+            sc = _block_scores(qblk, kr, qi, ki, bq, bkv, valid, causal, scale)
+            p = jnp.exp(sc - lse[..., None])  # (b,h,q,t)
+            dp = jnp.einsum("bqhd,bthd->bhqt", doblk, vr).astype(jnp.float32)
+            ds = p * (dp - dl[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bhqt,bthd->bqhd", ds.astype(qblk.dtype), kr
+            ).astype(jnp.float32)
+            return dq_acc, None
+
+        dq0 = head_shard(jnp.zeros((b, bq, h, d), jnp.float32), 2)
+        dq_blk, _ = jax.lax.scan(kv_step, dq0, (kb, vb, kv_valid, jnp.arange(nkv)))
+        return None, dq_blk
+
+    _, dq_blocks = jax.lax.scan(
+        dq_step, None, (qb, dob, lses, delta, jnp.arange(nq))
+    )
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4).reshape(b, s_pad, h, d)[:, :s]
+
+    # --- dk/dv: scan kv blocks, inner scan q -------------------------------
+    def dkv_step(_, kv_in):
+        kblk, vblk, valid, ki = kv_in
+        kr = _repeat_kv(kblk, h)
+        vr = _repeat_kv(vblk, h)
+
+        def q_step(carry, q_in):
+            dk_acc, dv_acc = carry
+            qblk, doblk, lse, dl, qi = q_in
+            sc = _block_scores(qblk, kr, qi, ki, bq, bkv, valid, causal, scale)
+            p = jnp.exp(sc - lse[..., None])
+            dv_acc = dv_acc + jnp.einsum(
+                "bhqt,bqhd->bthd", p.astype(qblk.dtype), doblk
+            ).astype(jnp.float32)
+            dp = jnp.einsum("bqhd,bthd->bhqt", doblk, vr).astype(jnp.float32)
+            ds = p * (dp - dl[..., None]) * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bhqt,bqhd->bthd", ds.astype(qblk.dtype), qblk
+            ).astype(jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        dk0 = head_shard(jnp.zeros((b, bkv, h, d), jnp.float32), 2)
+        dv0 = head_shard(jnp.zeros((b, bkv, h, d), jnp.float32), 2)
+        (dk_blk, dv_blk), _ = jax.lax.scan(
+            q_step, (dk0, dv0), (qb, dob, lses, delta, jnp.arange(nq))
+        )
+        return None, (dk_blk, dv_blk)
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(
+        dkv_step, None, (kb, vb, kv_valid, jnp.arange(nkv))
+    )
+    dk_h = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(b, skv_pad, h, d)[:, :skv]
+    dv_h = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(b, skv_pad, h, d)[:, :skv]
+    # fold repeated heads back to KV heads (one reduction per call, not per block)
+    dk = dk_h.reshape(b, skv, kvh, g, d).sum(3).astype(k.dtype)
+    dv = dv_h.reshape(b, skv, kvh, g, d).sum(3).astype(v.dtype)
+    return dq.astype(q.dtype), dk, dv
+
+
+_blocked_attention.defvjp(_blocked_attention_fwd, _blocked_attention_bwd)
+
+
+def attention(
+    params,
+    cfg,
+    x: jax.Array,
+    *,
+    causal: bool = True,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+    rope: bool = True,
+    impl: str | None = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill).  x: (B, S, d_model).
+
+    ``kv_override`` supplies externally-computed K/V (cross-attention).
+    Returns (B, S, d_model); caller adds residual.
+    """
+    q, k, v = _project_qkv(params, cfg, x, rope=rope)
+    if kv_override is not None:
+        k, v = kv_override
+    impl = impl or cfg.attention_impl
+    if impl == "auto":
+        impl = "blocked" if max(q.shape[1], k.shape[1]) > 2048 else "dense"
+    if impl == "dense":
+        out = _dense_attention(q, k, v, causal=causal)
+    else:
+        out = _blocked_attention(
+            q, k, v, causal, cfg.attention_block_q, cfg.attention_block_kv
+        )
+    return _out_proj(params, out)
+
+
+def compute_kv(params, cfg, x: jax.Array, *, rope: bool = False):
+    """K/V for cross-attention from encoder states."""
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    return k, v
+
+
+def decode_attention(
+    params,
+    cfg,
+    x: jax.Array,  # (B, 1, d_model) current-token activations
+    cache_k: jax.Array,  # (B, S_cache, KV, D)
+    cache_v: jax.Array,
+    pos: jax.Array,  # (B,) per-sequence positions (continuous batching)
+    *,
+    update_cache: bool = True,
+    lse_partial: bool = False,
+    rope: bool = True,
+    rope_pos: jax.Array | None = None,
+):
+    """Single-token decode with a KV cache and PER-SEQUENCE positions —
+    slots in a continuous-batching server progress independently.
+
+    ``rope_pos`` decouples the rotary position from the cache/mask
+    position (context-parallel decode masks with LOCAL window positions
+    while rotating queries at the GLOBAL position).
+
+    Returns (out (B,1,d_model), new_k, new_v) — or, with ``lse_partial``,
+    (numerator (B,1,H,D), lse (B,1,H), new_k, new_v) for the sharded
+    flash-decoding combine in distributed/decode.py.
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    rp = pos if rope_pos is None else jnp.broadcast_to(jnp.asarray(rope_pos), (b,))
+    q, k_new, v_new = _project_qkv(
+        params, cfg, x, positions=rp[:, None], rope=rope
+    )
+    if update_cache:
+        bidx = jnp.arange(b)
+        cache_k = cache_k.at[bidx, pos].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, pos].set(v_new[:, 0].astype(cache_v.dtype))
+    skv, kvh = cache_k.shape[1], cache_k.shape[2]
+    g = cfg.num_heads // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qg, cache_k.astype(q.dtype))
+    scores = scores.astype(jnp.float32) * hd**-0.5
+    valid = jnp.arange(skv)[None, :] <= pos[:, None]  # (B, skv)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    if lse_partial:
+        # flash-decoding partials: NORMALIZED local output + lse, so shards
+        # combine as  out = sum_i exp(lse_i - M) out_i / sum_i exp(lse_i - M)
+        m = scores.max(axis=-1)
+        p = jnp.exp(scores - m[..., None])
+        l = jnp.maximum(p.sum(axis=-1), 1e-30)
+        num = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(q.dtype), cache_v.astype(q.dtype))
+        out_local = num / l[..., None].astype(num.dtype)
+        lse = m + jnp.log(l)
+        out_local = out_local.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.num_heads, hd)
+        lse = lse.transpose(0, 3, 1, 2).reshape(b, 1, cfg.num_heads)
+        return out_local, lse, cache_k, cache_v
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkd->bkgqd", probs, cache_v.astype(q.dtype))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, cfg.num_heads, hd)
+    return _out_proj(params, out), cache_k, cache_v
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """Marker type for documentation; params are plain dict pytrees."""

@@ -1,0 +1,150 @@
+"""Shared neural building blocks (pure-functional, pytree params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "dense",
+    "init_dense",
+    "init_embedding",
+    "swiglu",
+    "init_swiglu",
+    "rope_frequencies",
+    "apply_rope",
+    "shard_hint",
+]
+
+
+def shard_hint(x: jax.Array, spec) -> jax.Array:
+    """with_sharding_constraint if a mesh context is active, else identity."""
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def head_shard(x: jax.Array, head_axis: int, *, batch_axis: int | None = 0) -> jax.Array:
+    """Constrain the attention-head axis to 'model' AND the batch axis to
+    the data axes, leaving others unconstrained.  No-op outside a mesh
+    context (tests).
+
+    Scan carries initialized from constants otherwise resolve to a
+    replicated sharding — GSPMD then re-shards (or worse, replicates the
+    whole block chain) every scan step; pinning only the head axis still
+    let the BACKWARD carries replicate over batch (measured +1.5TB AR,
+    §Perf iteration 2)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.layout import batch_axis_tries, get_layout
+
+    dp_only = get_layout() == "dp_only"
+    tries = batch_axis_tries() if batch_axis is not None else [None]
+    for dp in tries:
+        spec = [P.UNCONSTRAINED] * x.ndim
+        if not dp_only:
+            spec[head_axis] = "model"
+        if batch_axis is not None and dp is not None and x.shape[batch_axis] >= 2:
+            spec[batch_axis] = dp
+        try:
+            return jax.lax.with_sharding_constraint(x, P(*spec))
+        except (ValueError, RuntimeError, NameError, KeyError, TypeError):
+            continue
+    # final fallback: head-only constraint
+    spec = [P.UNCONSTRAINED] * x.ndim
+    if not dp_only:
+        spec[head_axis] = "model"
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, NameError, KeyError, TypeError):
+        return x
+
+
+@jax.custom_vjp
+def grad_fence_bf16(x: jax.Array) -> jax.Array:
+    """Identity with a bf16 cotangent fence.
+
+    The loss/norm upcasts leak f32 into the residual-stream cotangents;
+    every model-axis collective in the backward then moves f32.  Casting
+    the cotangent to bf16 at layer boundaries halves those collective
+    bytes (§Perf iteration 3) while parameter-gradient ACCUMULATION stays
+    f32 (the microbatch accumulator upcasts)."""
+    return x
+
+
+def _gf_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)  # dtype token (residuals must be arrays)
+
+
+def _gf_bwd(tok, g):
+    return (g.astype(jnp.bfloat16).astype(tok.dtype),)
+
+
+grad_fence_bf16.defvjp(_gf_fwd, _gf_bwd)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 STATISTICS but a low-precision residual path.
+
+    Only the variance reduction runs in f32; the normalization multiply
+    stays in x.dtype, so backward cotangents stay bf16 — otherwise the f32
+    upcast leaks into the TP all-reduces of the projection transposes and
+    doubles every model-axis collective (measured: §Perf iteration 1)."""
+    dt = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * scale * weight.astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, *, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in**-0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def dense(params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, *, dtype=jnp.float32):
+    return {"emb": (jax.random.normal(key, (vocab, d)) * d**-0.5).astype(dtype)}
+
+
+def init_swiglu(key, d: int, d_ff: int, *, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, d_ff, dtype=dtype)["w"],
+        "w_up": init_dense(k2, d, d_ff, dtype=dtype)["w"],
+        "w_down": init_dense(k3, d_ff, d, dtype=dtype, scale=d_ff**-0.5)["w"],
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    up = x @ params["w_up"].astype(dt)
+    return (gate * up) @ params["w_down"].astype(dt)
+
+
+def rope_frequencies(head_dim: int, positions: jax.Array, theta: float = 1e4):
+    """(..., head_dim/2) cos/sin tables for the given positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (seq, head_dim/2)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast cos/sin over the heads axis
+    c = cos[..., :, None, :].astype(jnp.float32)
+    s = sin[..., :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(dt)

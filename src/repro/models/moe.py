@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer with one-hot matmul dispatch/combine.
+
+The dispatch/combine is deliberately the same primitive as the spMTTKRP
+Pallas kernel's segment reduction (DESIGN.md §4): expert routing is a
+sparse gather/scatter-accumulate over an index map, and on TPU we express
+it as dense one-hot matmuls that run on the MXU instead of irregular
+memory traffic — the architectural translation of the paper's O-SRAM
+scatter buffer.  Expert weights are stacked on a leading axis that shards
+over the ``model``/expert-parallel mesh axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_moe", "moe_layer", "router_load_balancing_loss"]
+
+
+def init_moe(key, cfg, *, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    e, ff = cfg.num_experts, cfg.moe_d_ff
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale_in, scale_out = d**-0.5, ff**-0.5
+    pd = cfg.param_dtype
+    return {
+        "router": (jax.random.normal(kr, (d, e)) * scale_in).astype(pd),
+        "w_gate": (jax.random.normal(k1, (e, d, ff)) * scale_in).astype(pd),
+        "w_up": (jax.random.normal(k2, (e, d, ff)) * scale_in).astype(pd),
+        "w_down": (jax.random.normal(k3, (e, ff, d)) * scale_out).astype(pd),
+    }
+
+
+def _top_k_gating(logits: jax.Array, k: int):
+    """Normalized top-k gates + expert assignment. logits: (T, E)."""
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, k)  # (T, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    return gates, top_vals, top_idx
+
+
+def moe_layer(params, cfg, x: jax.Array, *, return_aux: bool = False):
+    """x: (B, S, d).  Capacity-based GShard-style dispatch, GROUPED by batch
+    row: each group of T_g = S tokens dispatches into per-group capacity
+    C_g = ceil(cf * k * T_g / E).  Grouping is what keeps the one-hot
+    dispatch matmuls at ~1x the expert-FFN cost (2*E*C_g*d per token) —
+    ungrouped global capacity would be ~E/k times more expensive.
+
+    dispatch  (G, T_g, E, C_g) one-hot @ x (G, T_g, d) -> (G, E, C_g, d)
+    combine   transposed, with gate weights folded in.
+    Both run on the MXU — the same segment-reduction-as-matmul primitive
+    as the spMTTKRP kernel (DESIGN.md §4).  Experts (leading E axis of the
+    stacked weights) shard over the 'model' axis; the combine's E
+    contraction yields the single per-layer all-reduce.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    # dispatch groups: split each sequence into chunks of moe_group_size
+    # (dispatch cost is linear in group length — see config.moe_group_size)
+    tg = min(s, cfg.moe_group_size or s)
+    if s % tg != 0:
+        tg = s
+    orig_b = b
+    b = b * (s // tg)
+    x = x.reshape(b, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", x, params["router"].astype(x.dtype))
+    gates, top_vals, top_idx = _top_k_gating(logits.reshape(b * tg, e), k)
+    top_vals = top_vals.reshape(b, tg, k)
+    top_idx = top_idx.reshape(b, tg, k)
+
+    capacity = max(1, int(cfg.capacity_factor * k * tg / e))
+    capacity = min(capacity, tg)
+
+    # Position of each (token, slot) within its expert's per-group buffer.
+    onehot_i = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)  # (G, T, k, E)
+    flat = onehot_i.reshape(b, tg * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, tg, k, e)
+    pos = (pos_in_expert * onehot_i).sum(-1)  # (G, T, k)
+    keep = pos < capacity  # overflow tokens dropped (standard GShard)
+
+    gate_w = top_vals * keep  # (G, T, k)
+    onehot_e = jax.nn.one_hot(top_idx, e, dtype=x.dtype)  # (G, T, k, E)
+    onehot_c = jax.nn.one_hot(pos, capacity, dtype=x.dtype)  # (G, T, k, C)
+    disp = jnp.einsum(
+        "gtke,gtkc,gtk->gtec", onehot_e, onehot_c, keep.astype(x.dtype)
+    )
+    comb = jnp.einsum(
+        "gtke,gtkc,gtk->gtec",
+        onehot_e.astype(jnp.float32),
+        onehot_c.astype(jnp.float32),
+        gate_w.astype(jnp.float32),
+    ).astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", disp, x)  # (G, E, C, d)
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, wg))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, wu)
+    expert_out = jnp.einsum("gecf,efd->gecd", gate * up, wd)
+    y = jnp.einsum("gtec,gecd->gtd", comb, expert_out)  # (G, T, d)
+    y = y.reshape(orig_b, s, d)
+
+    if return_aux:
+        aux = router_load_balancing_loss(gates, top_idx.reshape(b * tg, k), e)
+        return y, aux
+    return y
+
+
+def router_load_balancing_loss(gates: jax.Array, top_idx: jax.Array, e: int):
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e.  gates/top_idx: (T,E)/(T,k)."""
+    me = jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32).mean(0)  # fraction routed
+    pe = gates.astype(jnp.float32).mean(0)
+    return e * jnp.sum(me * pe)

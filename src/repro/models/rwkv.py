@@ -1,0 +1,210 @@
+"""RWKV6 "Finch" block — attention-free token mixing with data-dependent decay.
+
+Per head (head_dim = 64), the WKV state S in R^{hd x hd} evolves as
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(lora_w(x_t))) the data-dependent decay (the Finch
+contribution, arXiv:2404.05892).  Token-shift mixing interpolates each
+projection input with the previous token.  Sequence path uses lax.scan;
+decode is one state update (the reason rwkv6 runs the long_500k shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+__all__ = [
+    "init_rwkv_block",
+    "rwkv_time_mix_seq",
+    "rwkv_channel_mix_seq",
+    "rwkv_time_mix_step",
+    "rwkv_channel_mix_step",
+    "init_rwkv_state",
+]
+
+HEAD_DIM = 64
+LORA_R = 32
+
+
+def init_rwkv_block(key, cfg):
+    d = cfg.d_model
+    ff = cfg.d_ff
+    nheads = d // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    pd = cfg.param_dtype
+    p = {
+        # time-mix projections
+        "wr": init_dense(ks[0], d, d, dtype=pd)["w"],
+        "wk": init_dense(ks[1], d, d, dtype=pd)["w"],
+        "wv": init_dense(ks[2], d, d, dtype=pd)["w"],
+        "wg": init_dense(ks[3], d, d, dtype=pd)["w"],
+        "wo": init_dense(ks[4], d, d, dtype=pd)["w"],
+        # data-dependent decay LoRA: d -> r -> d
+        "w_lora_a": init_dense(ks[5], d, LORA_R, dtype=pd)["w"],
+        "w_lora_b": (jax.random.normal(ks[6], (LORA_R, d)) * 0.01).astype(pd),
+        "w_base": jnp.full((d,), -6.0, pd),  # decay bias (slow by default)
+        "u_bonus": (jax.random.normal(ks[7], (d,)) * 0.1).astype(pd),
+        # token-shift interpolation factors (static part; v6 LoRA omitted)
+        "mu_r": jnp.full((d,), 0.5, pd),
+        "mu_k": jnp.full((d,), 0.5, pd),
+        "mu_v": jnp.full((d,), 0.5, pd),
+        "mu_g": jnp.full((d,), 0.5, pd),
+        "mu_w": jnp.full((d,), 0.5, pd),
+        # channel mix
+        "ck": init_dense(ks[8], d, ff, dtype=pd)["w"],
+        "cv": init_dense(ks[9], ff, d, dtype=pd)["w"],
+        "cr": init_dense(ks[10], d, d, dtype=pd)["w"],
+        "mu_ck": jnp.full((d,), 0.5, pd),
+        "mu_cr": jnp.full((d,), 0.5, pd),
+        "ln_x": jnp.ones((d,), pd),  # group-norm weight on wkv output
+    }
+    return p
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    nheads = d // HEAD_DIM
+    return {
+        "wkv": jnp.zeros((batch, nheads, HEAD_DIM, HEAD_DIM), dtype),
+        "x_prev_t": jnp.zeros((batch, d), dtype),  # last input of time-mix
+        "x_prev_c": jnp.zeros((batch, d), dtype),  # last input of channel-mix
+    }
+
+
+def _chunked_scan(step, carry0, xs, seq_len: int, chunk: int):
+    """lax.scan over time with chunk-boundary checkpointing.
+
+    The inner per-chunk scan is wrapped in jax.checkpoint, so autodiff
+    saves only the chunk-boundary carries (seq/chunk states) and
+    recomputes inside each chunk in the backward — the linear-attention
+    analog of flash attention's recompute (§Perf iteration 10).
+    xs: tuple of (S, ...) arrays.
+    """
+    if chunk <= 1 or seq_len <= chunk or seq_len % chunk != 0:
+        return jax.lax.scan(step, carry0, xs)
+    n = seq_len // chunk
+
+    def reshape(a):
+        return a.reshape((n, chunk) + a.shape[1:])
+
+    xs_c = jax.tree_util.tree_map(reshape, xs)
+
+    @jax.checkpoint
+    def chunk_step(carry, xs_chunk):
+        return jax.lax.scan(step, carry, xs_chunk)
+
+    carry, ys = jax.lax.scan(chunk_step, carry0, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((seq_len,) + a.shape[2:]), ys
+    )
+    return carry, ys
+
+
+def _token_shift(x: jax.Array, x_prev_first):
+    """x_{t-1} for every position; (B,S,d) with row 0 substituted."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_first is not None:
+        shifted = shifted.at[:, 0].set(x_prev_first.astype(x.dtype))
+    return shifted
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def rwkv_time_mix_seq(params, cfg, x: jax.Array, *, x_prev=None):
+    """Full-sequence WKV.  x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    nheads = d // HEAD_DIM
+    xs = _token_shift(x, x_prev)
+
+    r = _mix(x, xs, params["mu_r"]) @ params["wr"].astype(x.dtype)
+    k = _mix(x, xs, params["mu_k"]) @ params["wk"].astype(x.dtype)
+    v = _mix(x, xs, params["mu_v"]) @ params["wv"].astype(x.dtype)
+    g = _mix(x, xs, params["mu_g"]) @ params["wg"].astype(x.dtype)
+    wx = _mix(x, xs, params["mu_w"])
+    lora = jnp.tanh(wx @ params["w_lora_a"].astype(x.dtype)) @ params["w_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp(params["w_base"].astype(jnp.float32) + lora.astype(jnp.float32)))
+
+    rh = r.reshape(b, s, nheads, HEAD_DIM).astype(jnp.float32)
+    kh = k.reshape(b, s, nheads, HEAD_DIM).astype(jnp.float32)
+    vh = v.reshape(b, s, nheads, HEAD_DIM).astype(jnp.float32)
+    wh = w.reshape(b, s, nheads, HEAD_DIM)
+    u = params["u_bonus"].astype(jnp.float32).reshape(nheads, HEAD_DIM)
+
+    def step(s_state, ins):
+        r_t, k_t, v_t, w_t = ins  # (B, nheads, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,nh,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s_state + u[None, :, :, None] * kv)
+        s_new = w_t[..., None] * s_state + kv
+        return s_new, y
+
+    from repro.models.layers import head_shard
+
+    s0 = head_shard(jnp.zeros((b, nheads, HEAD_DIM, HEAD_DIM), jnp.float32), 1)
+    # xs: (S, B, nh, hd) — pin heads to 'model' (uneven 40/16 is padded by
+    # GSPMD) and batch to data so the chunk recompute stays local
+    xs_scan = tuple(
+        head_shard(a.transpose(1, 0, 2, 3), 2, batch_axis=1)
+        for a in (rh, kh, vh, wh)
+    )
+    _, ys = _chunked_scan(step, s0, xs_scan, s, cfg.scan_chunk)  # (S, B, nh, hd)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    # per-head group norm
+    mean = y.reshape(b, s, nheads, HEAD_DIM).mean(-1, keepdims=True)
+    var = y.reshape(b, s, nheads, HEAD_DIM).var(-1, keepdims=True)
+    y = ((y.reshape(b, s, nheads, HEAD_DIM) - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    y = y.astype(x.dtype) * params["ln_x"].astype(x.dtype)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(x.dtype)
+    return out
+
+
+def rwkv_channel_mix_seq(params, cfg, x: jax.Array, *, x_prev=None):
+    xs = _token_shift(x, x_prev)
+    k = _mix(x, xs, params["mu_ck"]) @ params["ck"].astype(x.dtype)
+    r = jax.nn.sigmoid(_mix(x, xs, params["mu_cr"]) @ params["cr"].astype(x.dtype))
+    return r * (jnp.square(jax.nn.relu(k)) @ params["cv"].astype(x.dtype))
+
+
+def rwkv_time_mix_step(params, cfg, xt: jax.Array, wkv_state, x_prev):
+    """One-token time mix.  xt: (B, d) (post-norm).  Returns (out, wkv', xt)."""
+    b, d = xt.shape
+    nheads = d // HEAD_DIM
+    xs = x_prev.astype(xt.dtype)
+
+    r = _mix(xt, xs, params["mu_r"]) @ params["wr"].astype(xt.dtype)
+    k = _mix(xt, xs, params["mu_k"]) @ params["wk"].astype(xt.dtype)
+    v = _mix(xt, xs, params["mu_v"]) @ params["wv"].astype(xt.dtype)
+    g = _mix(xt, xs, params["mu_g"]) @ params["wg"].astype(xt.dtype)
+    wx = _mix(xt, xs, params["mu_w"])
+    lora = jnp.tanh(wx @ params["w_lora_a"].astype(xt.dtype)) @ params["w_lora_b"].astype(xt.dtype)
+    w = jnp.exp(-jnp.exp(params["w_base"].astype(jnp.float32) + lora.astype(jnp.float32)))
+
+    rh = r.reshape(b, nheads, HEAD_DIM).astype(jnp.float32)
+    kh = k.reshape(b, nheads, HEAD_DIM).astype(jnp.float32)
+    vh = v.reshape(b, nheads, HEAD_DIM).astype(jnp.float32)
+    wh = w.reshape(b, nheads, HEAD_DIM)
+    u = params["u_bonus"].astype(jnp.float32).reshape(nheads, HEAD_DIM)
+
+    s_state = wkv_state.astype(jnp.float32)
+    kv = kh[..., :, None] * vh[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rh, s_state + u[None, :, :, None] * kv)
+    s_new = wh[..., None] * s_state + kv
+
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, d)
+    y = y.astype(xt.dtype) * params["ln_x"].astype(xt.dtype)
+    out = (y * jax.nn.silu(g)) @ params["wo"].astype(xt.dtype)
+    return out, s_new.astype(wkv_state.dtype), xt
+
+
+def rwkv_channel_mix_step(params, cfg, xt: jax.Array, x_prev):
+    """One-token channel mix.  xt: (B, d) (post-norm).  Returns (out, xt)."""
+    xs = x_prev.astype(xt.dtype)
+    k = _mix(xt, xs, params["mu_ck"]) @ params["ck"].astype(xt.dtype)
+    r = jax.nn.sigmoid(_mix(xt, xs, params["mu_cr"]) @ params["cr"].astype(xt.dtype))
+    return r * (jnp.square(jax.nn.relu(k)) @ params["cv"].astype(xt.dtype)), xt

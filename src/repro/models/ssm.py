@@ -1,0 +1,146 @@
+"""Mamba2-style selective state-space block (zamba2's core layer).
+
+Simplified SSD recurrence with multi-head state:
+    h_t = exp(-softplus(dt_t) * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · h_t + D * x_t
+State: (batch, heads, head_dim, d_state).  Sequence processing uses
+``lax.scan`` (single fused while-loop in HLO — compile-time friendly for
+524288-step shapes); decode is a single state update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+__all__ = ["init_mamba", "mamba_seq", "mamba_decode_step", "init_mamba_state"]
+
+CONV_K = 4  # short causal depthwise conv window
+
+
+def init_mamba(key, cfg, *, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    d_inner = 2 * d
+    hd = 64
+    nheads = d_inner // hd
+    ds = cfg.ssm_state
+    keys = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    return {
+        # input projection -> [x (d_inner), z (d_inner), B (ds), C (ds), dt (nheads)]
+        "w_in": init_dense(keys[0], d, 2 * d_inner + 2 * ds + nheads, dtype=pd)["w"],
+        "w_out": init_dense(keys[1], d_inner, d, dtype=pd)["w"],
+        "conv": (jax.random.normal(keys[2], (CONV_K, d_inner + 2 * ds)) * 0.1).astype(pd),
+        "a_log": jnp.zeros((nheads,), pd),  # A = -exp(a_log)
+        "d_skip": jnp.ones((nheads,), pd),
+        "dt_bias": jnp.zeros((nheads,), pd),
+    }
+
+
+def _split_proj(cfg, proj, d_inner, ds, nheads):
+    x, z, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + ds, 2 * d_inner + 2 * ds], axis=-1
+    )
+    return x, z, b, c, dt
+
+
+def _causal_conv(seq: jax.Array, weights: jax.Array, *, init=None):
+    """Depthwise causal conv over (B, S, C) with window CONV_K."""
+    out = jnp.zeros_like(seq)
+    for i in range(CONV_K):
+        shifted = jnp.pad(seq, ((0, 0), (i, 0), (0, 0)))[:, : seq.shape[1]]
+        out = out + shifted * weights[CONV_K - 1 - i]
+    return jax.nn.silu(out)
+
+
+def init_mamba_state(cfg, batch: int, *, d_model: int | None = None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    d_inner = 2 * d
+    nheads = d_inner // 64
+    return {
+        "h": jnp.zeros((batch, nheads, 64, cfg.ssm_state), dtype),
+        "conv_buf": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba_seq(params, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 pass.  x: (B, S, d) -> (B, S, d)."""
+    bsz, s, d = x.shape
+    d_inner = 2 * d
+    ds = cfg.ssm_state
+    hd = 64
+    nheads = d_inner // hd
+
+    proj = x @ params["w_in"].astype(x.dtype)
+    xi, z, b, c, dt = _split_proj(cfg, proj, d_inner, ds, nheads)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv"].astype(x.dtype))
+    xi, b, c = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (nheads,)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dt_act * a)  # (B, S, nheads)
+
+    xh = xi.reshape(bsz, s, nheads, hd).astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    dtx = dt_act[..., None] * xh  # (B,S,nheads,hd)
+
+    def step(h, ins):
+        dec_t, dtx_t, b_t, c_t = ins
+        # h: (B, nheads, hd, ds)
+        h = h * dec_t[..., None, None] + dtx_t[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhds,bs->bhd", h, c_t)
+        return h, y
+
+    from repro.models.layers import head_shard
+    from repro.models.rwkv import _chunked_scan
+
+    h0 = head_shard(jnp.zeros((bsz, nheads, hd, ds), jnp.float32), 1)
+    xs = (
+        decay.transpose(1, 0, 2),
+        head_shard(dtx.transpose(1, 0, 2, 3), 2, batch_axis=1),
+        bf.transpose(1, 0, 2),
+        cf.transpose(1, 0, 2),
+    )
+    _, ys = _chunked_scan(step, h0, xs, s, cfg.scan_chunk)  # (S, B, nheads, hd)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def mamba_decode_step(params, cfg, x: jax.Array, state: dict):
+    """Single-token decode.  x: (B, 1, d); returns (y (B,1,d), new_state)."""
+    bsz, _, d = x.shape
+    d_inner = 2 * d
+    ds = cfg.ssm_state
+    hd = 64
+    nheads = d_inner // hd
+
+    proj = x[:, 0] @ params["w_in"].astype(x.dtype)  # (B, ...)
+    xi, z, b, c, dt = _split_proj(cfg, proj, d_inner, ds, nheads)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)  # (B, C)
+    buf = jnp.concatenate([state["conv_buf"].astype(x.dtype), conv_in[:, None]], axis=1)
+    w = params["conv"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", buf, w))
+    xi, b, c = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dt_act * a)  # (B, nheads)
+
+    xh = xi.reshape(bsz, nheads, hd).astype(jnp.float32)
+    h = state["h"].astype(jnp.float32)
+    h = h * decay[..., None, None] + (dt_act[..., None] * xh)[..., None] * b.astype(
+        jnp.float32
+    )[:, None, None, :]
+    y = jnp.einsum("bhds,bs->bhd", h, c.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["w_out"].astype(x.dtype))[:, None]
+    new_state = {"h": h.astype(state["h"].dtype), "conv_buf": buf[:, 1:].astype(state["conv_buf"].dtype)}
+    return out, new_state

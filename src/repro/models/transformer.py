@@ -1,0 +1,467 @@
+"""Model assembly for every architecture family.
+
+One functional API across families (dense / moe / ssm / hybrid / vlm / audio):
+
+  init_model(cfg, rng)                    -> params pytree
+  forward(params, cfg, batch)             -> logits  (train / prefill)
+  init_decode_state(cfg, batch, max_seq)  -> cache/state pytree
+  decode_step(params, cfg, tokens, state) -> (logits, new state)
+
+Layer stacks are HOMOGENEOUS and processed with ``lax.scan`` over stacked
+parameters (leading ``num_layers`` axis) — one layer body in the HLO
+regardless of depth, which keeps 94-layer/32k-sequence lowering tractable.
+``jax.checkpoint`` wraps the layer body according to cfg.remat_policy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention,
+    compute_kv,
+    decode_attention,
+    init_attention,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    grad_fence_bf16,
+    init_embedding,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+)
+from repro.models.moe import init_moe, moe_layer
+from repro.models.rwkv import (
+    init_rwkv_block,
+    init_rwkv_state,
+    rwkv_channel_mix_seq,
+    rwkv_channel_mix_step,
+    rwkv_time_mix_seq,
+    rwkv_time_mix_step,
+)
+from repro.models.ssm import (
+    init_mamba,
+    init_mamba_state,
+    mamba_decode_step,
+    mamba_seq,
+)
+
+__all__ = [
+    "init_model",
+    "forward",
+    "decode_step",
+    "init_decode_state",
+    "cross_entropy_loss",
+]
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key) -> dict:
+    """One core-layer parameter set for the arch family."""
+    kn1, kn2, ka, kf = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    p: dict[str, Any] = {
+        "ln1": jnp.ones((cfg.d_model,), pd),
+        "ln2": jnp.ones((cfg.d_model,), pd),
+    }
+    if cfg.rwkv:
+        p["rwkv"] = init_rwkv_block(ka, cfg)
+    elif cfg.family == "hybrid":
+        p["mamba"] = init_mamba(ka, cfg)
+        del p["ln2"]  # zamba core layer = norm + mamba only
+    else:
+        p["attn"] = init_attention(ka, cfg)
+        if cfg.is_moe:
+            p["ffn"] = init_moe(kf, cfg)
+        else:
+            p["ffn"] = init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype=pd)
+    return p
+
+
+def _init_stack(cfg: ModelConfig, key, n_layers: int) -> dict:
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: _init_layer(cfg, k))(keys)
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    ke, ks, ko, kx = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype=cfg.param_dtype),
+        "final_ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "layers": _init_stack(cfg, ks, cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(ko, cfg.padded_vocab, cfg.d_model, dtype=cfg.param_dtype)
+    if cfg.family == "hybrid":
+        # zamba2: ONE shared attention+mlp block reused every shared_attn_every
+        k1, k2, k3, k4 = jax.random.split(kx, 4)
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "attn": init_attention(k1, cfg),
+            "ffn": init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype=cfg.param_dtype),
+        }
+    if cfg.is_encoder_decoder:
+        kenc, kdec = jax.random.split(kx, 2)
+        enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+            "final_ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        }
+        # decoder cross-attention per layer
+        dec_keys = jax.random.split(kdec, cfg.num_layers)
+        params["cross"] = jax.vmap(
+            lambda k: {
+                "ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+                "attn": init_attention(k, cfg),
+            }
+        )(dec_keys)
+    return params
+
+
+def _init_enc_layer(cfg: ModelConfig, key) -> dict:
+    ka, kf = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "attn": init_attention(ka, cfg),
+        "ffn": init_swiglu(kf, cfg.d_model, cfg.d_ff, dtype=cfg.param_dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Layer bodies (full-sequence)
+# --------------------------------------------------------------------------
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full"
+
+
+def _dense_layer_seq(lp, cfg: ModelConfig, x, *, causal=True):
+    h = attention(lp["attn"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps), causal=causal)
+    x = x + h
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        x = x + moe_layer(lp["ffn"], cfg, h2)
+    else:
+        x = x + swiglu(lp["ffn"], h2)
+    return grad_fence_bf16(x)
+
+
+def _rwkv_layer_seq(lp, cfg: ModelConfig, x):
+    x = x + rwkv_time_mix_seq(lp["rwkv"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps))
+    x = x + rwkv_channel_mix_seq(lp["rwkv"], cfg, rms_norm(x, lp["ln2"], cfg.norm_eps))
+    return grad_fence_bf16(x)
+
+
+def _hybrid_layer_seq(lp, cfg: ModelConfig, x, shared, layer_idx):
+    x = x + mamba_seq(lp["mamba"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps))
+    if cfg.shared_attn_every:
+        def with_shared(x):
+            h = attention(
+                shared["attn"], cfg, rms_norm(x, shared["ln1"], cfg.norm_eps), causal=True
+            )
+            x = x + h
+            return x + swiglu(shared["ffn"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+
+        apply_shared = (layer_idx % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+        x = jax.lax.cond(apply_shared, with_shared, lambda x: x, x)
+    return grad_fence_bf16(x)
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch) -> jax.Array:
+    emb = params["embed"]["emb"]
+    if cfg.frontend is not None and "prefix_embeds" in batch:
+        tok = jnp.take(emb, batch["tokens"], axis=0).astype(cfg.dtype)
+        pre = batch["prefix_embeds"].astype(cfg.dtype)
+        return jnp.concatenate([pre, tok], axis=1)
+    return jnp.take(emb, batch["tokens"], axis=0).astype(cfg.dtype)
+
+
+def _run_stack(params, cfg: ModelConfig, x, *, causal=True):
+    if cfg.rwkv:
+        body = lambda lp, x: _rwkv_layer_seq(lp, cfg, x)
+        body = _remat(cfg, body)
+
+        def scan_fn(x, lp):
+            return body(lp, x), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        body = lambda lp, x, i: _hybrid_layer_seq(lp, cfg, x, shared, i)
+        body = _remat(cfg, body)
+
+        def scan_fn(x, inp):
+            lp, i = inp
+            return body(lp, x, i), None
+
+        idx = jnp.arange(cfg.num_layers)
+        x, _ = jax.lax.scan(scan_fn, x, (params["layers"], idx))
+    else:
+        body = lambda lp, x: _dense_layer_seq(lp, cfg, x, causal=causal)
+        body = _remat(cfg, body)
+
+        def scan_fn(x, lp):
+            return body(lp, x), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    return x
+
+
+def _run_encoder(params, cfg: ModelConfig, frames: jax.Array):
+    """Whisper encoder over stub frame embeddings (B, S_frames, d)."""
+    x = frames.astype(cfg.dtype)
+
+    def enc_layer(lp, x):
+        h = attention(lp["attn"], cfg, rms_norm(x, lp["ln1"], cfg.norm_eps), causal=False)
+        x = x + h
+        return x + swiglu(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+
+    body = _remat(cfg, enc_layer)
+
+    def scan_fn(x, lp):
+        return body(lp, x), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def _run_decoder_with_cross(params, cfg: ModelConfig, x, enc_out):
+    def dec_layer(carry_x, lps):
+        lp, cp = lps
+        h = attention(lp["attn"], cfg, rms_norm(carry_x, lp["ln1"], cfg.norm_eps), causal=True)
+        x = carry_x + h
+        kv = compute_kv(cp["attn"], cfg, enc_out)
+        h = attention(
+            cp["attn"], cfg, rms_norm(x, cp["ln"], cfg.norm_eps),
+            causal=False, kv_override=kv, rope=False,
+        )
+        x = x + h
+        x = x + swiglu(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x, None
+
+    body = _remat(cfg, lambda x, lps: dec_layer(x, lps)[0])
+
+    def scan_fn(x, lps):
+        return body(x, lps), None
+
+    x, _ = jax.lax.scan(scan_fn, x, (params["layers"], params["cross"]))
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Logits for train/prefill.  batch: {tokens, [prefix_embeds|frames]}."""
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(params, cfg, batch["frames"])
+        x = jnp.take(params["embed"]["emb"], batch["tokens"], axis=0).astype(cfg.dtype)
+        x = _run_decoder_with_cross(params, cfg, x, enc_out)
+    else:
+        x = _embed_inputs(params, cfg, batch)
+        x = _run_stack(params, cfg, x)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"]["emb"] if cfg.tie_embeddings else params["lm_head"]["emb"]
+    logits = x @ head.astype(x.dtype).T
+    logits = _mask_padded_vocab(logits, cfg)
+    if cfg.frontend is not None and "prefix_embeds" in batch:
+        logits = logits[:, batch["prefix_embeds"].shape[1] :]
+    return logits
+
+
+def _mask_padded_vocab(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+    return logits - pad_mask.astype(logits.dtype) * 1e9
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 1e-4):
+    """Mean next-token CE with z-loss regularization; labels -100 ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    valid = labels >= 0
+    safe_labels = jnp.where(valid, labels, 0)
+    picked = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    ce = lse - picked
+    zl = z_loss * jnp.square(lse)
+    total = jnp.where(valid, ce + zl, 0.0).sum()
+    return total / jnp.maximum(valid.sum(), 1)
+
+
+# --------------------------------------------------------------------------
+# Decode (single token, cached state)
+# --------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, *, cache_dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    if cfg.rwkv:
+        st = init_rwkv_state(cfg, batch)
+        return {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "wkv": jnp.zeros((L,) + st["wkv"].shape, jnp.float32),
+            "x_prev_t": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+            "x_prev_c": jnp.zeros((L, batch, cfg.d_model), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        st = init_mamba_state(cfg, batch)
+        n_shared = (
+            L // cfg.shared_attn_every if cfg.shared_attn_every else 0
+        )
+        state = {
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "h": jnp.zeros((L,) + st["h"].shape, jnp.float32),
+            "conv_buf": jnp.zeros((L,) + st["conv_buf"].shape, jnp.float32),
+        }
+        if n_shared:
+            state["shared_k"] = jnp.zeros(
+                (n_shared, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cache_dtype
+            )
+            state["shared_v"] = jnp.zeros_like(state["shared_k"])
+        return state
+    # attention families
+    state = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cache_dtype),
+        "v": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, cfg.head_dim), cache_dtype),
+    }
+    if cfg.is_encoder_decoder:
+        # cross K/V computed at prefill from encoder output; stored per layer
+        state["cross_k"] = jnp.zeros(
+            (L, batch, cfg.max_target_len, cfg.num_kv_heads, cfg.head_dim), cache_dtype
+        )
+        state["cross_v"] = jnp.zeros_like(state["cross_k"])
+    return state
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, state: dict):
+    """One decode step.  tokens: (B,) int32.  Returns (logits (B,V), state')."""
+    pos = state["pos"]
+    x = jnp.take(params["embed"]["emb"], tokens, axis=0)[:, None].astype(cfg.dtype)
+
+    if cfg.rwkv:
+        def body(x, lps):
+            lp, wkv, xt_prev, xc_prev = lps
+            h = rms_norm(x[:, 0], lp["ln1"], cfg.norm_eps)
+            out, wkv2, xt2 = rwkv_time_mix_step(lp["rwkv"], cfg, h, wkv, xt_prev)
+            x = x + out[:, None]
+            h2 = rms_norm(x[:, 0], lp["ln2"], cfg.norm_eps)
+            out2, xc2 = rwkv_channel_mix_step(lp["rwkv"], cfg, h2, xc_prev)
+            x = x + out2[:, None]
+            return x, (wkv2, xt2.astype(jnp.float32), xc2.astype(jnp.float32))
+
+        x, (wkv, xt, xc) = jax.lax.scan(
+            body, x, (params["layers"], state["wkv"], state["x_prev_t"], state["x_prev_c"])
+        )
+        new_state = dict(state, pos=pos + 1, wkv=wkv, x_prev_t=xt, x_prev_c=xc)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        every = cfg.shared_attn_every
+
+        def body(carry, lps):
+            x = carry
+            lp, h_st, conv_st, idx = lps
+            hin = rms_norm(x[:, 0], lp["ln1"], cfg.norm_eps)[:, None]
+            out, st2 = mamba_decode_step(lp["mamba"], cfg, hin, {"h": h_st, "conv_buf": conv_st})
+            x = x + out
+            return x, (st2["h"], st2["conv_buf"])
+
+        # interleave: scan groups of ``every`` mamba layers, then shared attn
+        n_shared = cfg.num_layers // every if every else 0
+        new_h, new_conv = [], []
+        new_sk, new_sv = [], []
+        li = 0
+        for g in range(max(n_shared, 1)):
+            lo = g * every if every else 0
+            hi = (g + 1) * every if every else cfg.num_layers
+            sl = lambda a: jax.tree_util.tree_map(lambda t: t[lo:hi], a)
+            x, (h2, c2) = jax.lax.scan(
+                body, x,
+                (sl(params["layers"]), state["h"][lo:hi], state["conv_buf"][lo:hi],
+                 jnp.arange(lo, hi)),
+            )
+            new_h.append(h2)
+            new_conv.append(c2)
+            if every:
+                h = rms_norm(x[:, 0], shared["ln1"], cfg.norm_eps)[:, None]
+                out, ck, cv = decode_attention(
+                    shared["attn"], cfg, h, state["shared_k"][g], state["shared_v"][g], pos
+                )
+                x = x + out
+                x = x + swiglu(shared["ffn"], rms_norm(x, shared["ln2"], cfg.norm_eps))
+                new_sk.append(ck)
+                new_sv.append(cv)
+        # trailing layers not covered by full groups
+        done = (n_shared * every) if every else cfg.num_layers
+        if done < cfg.num_layers:
+            sl = lambda a: jax.tree_util.tree_map(lambda t: t[done:], a)
+            x, (h2, c2) = jax.lax.scan(
+                body, x,
+                (sl(params["layers"]), state["h"][done:], state["conv_buf"][done:],
+                 jnp.arange(done, cfg.num_layers)),
+            )
+            new_h.append(h2)
+            new_conv.append(c2)
+        new_state = dict(
+            state,
+            pos=pos + 1,
+            h=jnp.concatenate(new_h),
+            conv_buf=jnp.concatenate(new_conv),
+        )
+        if every:
+            new_state["shared_k"] = jnp.stack(new_sk)
+            new_state["shared_v"] = jnp.stack(new_sv)
+    else:
+        def body(x, lps):
+            lp, ck, cv = lps[:3]
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            out, ck2, cv2 = decode_attention(lp["attn"], cfg, h, ck, cv, pos)
+            x = x + out
+            if cfg.is_encoder_decoder:
+                cp, xk, xv = lps[3], lps[4], lps[5]
+                h = rms_norm(x, cp["ln"], cfg.norm_eps)
+                out, _, _ = decode_attention(
+                    cp["attn"], cfg, h, xk, xv, xk.shape[1] - 1,
+                    update_cache=False, rope=False,
+                )
+                x = x + out
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                x = x + moe_layer(lp["ffn"], cfg, h2)
+            else:
+                x = x + swiglu(lp["ffn"], h2)
+            return x, (ck2, cv2)
+
+        if cfg.is_encoder_decoder:
+            xs = (params["layers"], state["k"], state["v"], params["cross"],
+                  state["cross_k"], state["cross_v"])
+        else:
+            xs = (params["layers"], state["k"], state["v"])
+        x, (k2, v2) = jax.lax.scan(body, x, xs)
+        new_state = dict(state, pos=pos + 1, k=k2, v=v2)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"]["emb"] if cfg.tie_embeddings else params["lm_head"]["emb"]
+    logits = (x[:, 0] @ head.astype(x.dtype).T).astype(jnp.float32)
+    logits = _mask_padded_vocab(logits, cfg)
+    return logits, new_state

@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay, global-norm clipping and pytree state.
+
+State layout: {"params", "m", "v", "step", "lr"} — everything params-shaped
+shards exactly like params (distributed.sharding.train_state_shardings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "init_adamw_state", "global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def init_adamw_state(params, *, lr: float = 3e-4) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "params": params,
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+        "lr": jnp.asarray(lr, jnp.float32),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: Callable | None = None  # step -> lr multiplier
+    # error-feedback gradient compression hook (optim.grad_compress)
+    compressor: object | None = None
+
+    def apply_gradients(self, state: dict, grads: dict) -> tuple[dict, dict]:
+        step = state["step"] + 1
+        lr = state["lr"]
+        if self.schedule is not None:
+            lr = lr * self.schedule(step)
+
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m2 / bc1
+            vh = v2 / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * delta
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree_util.tree_flatten(state["params"])
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_state = dict(state, params=new_p, m=new_m, v=new_v, step=step)
+        return new_state, {"grad_norm": gnorm, "lr": lr}
+
+    def step(self, state: dict, batch, loss_fn) -> tuple[jax.Array, dict, dict]:
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        if self.compressor is not None:
+            grads, state = self.compressor.compress_tree(grads, state)
+        new_state, metrics = self.apply_gradients(state, grads)
+        return loss, new_state, metrics

@@ -1,0 +1,24 @@
+"""LR schedules (multiplicative factors applied to the base lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def constant():
+    return lambda step: jnp.asarray(1.0, jnp.float32)
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, *, min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return f

@@ -1,0 +1,104 @@
+"""Collective-traffic breakdown by HLO site, trip-count-aware (perf tool).
+
+    PYTHONPATH=src python -m repro.perf.coll_breakdown <arch> <shape> [top_n]
+
+Used throughout §Perf to pick the next hypothesis: prints per-site ICI
+bytes/chip with instruction counts, group sizes and shapes.
+"""
+
+import re
+import sys
+from collections import Counter, defaultdict
+
+import repro.perf.hlo_cost as H
+
+__all__ = ["breakdown"]
+
+
+def breakdown(hlo_text: str, top_n: int = 12):
+    comps = H._parse_computations(hlo_text)
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    entry = m.group(1)
+    edges = defaultdict(list)
+    colls = defaultdict(lambda: [0, 0.0])
+    for cname, instrs in comps.items():
+        for i in instrs:
+            called = H._called_comps(i.rest)
+            if i.op == "while":
+                tm = H._TRIP_RE.search(i.rest)
+                trips = int(tm.group(1)) if tm else 1
+                for key in ("body", "condition"):
+                    if key in called:
+                        edges[cname].append((called[key], trips))
+            elif i.op in ("fusion", "call", "conditional"):
+                for c in called.values():
+                    edges[cname].append((c, 1))
+            if i.op in H._COLLECTIVES:
+                _, b = H._shape_elems_bytes(i.shape_str)
+                n = H._group_size(i.rest)
+                key = (cname, i.op, i.shape_str[:48], n)
+                colls[key][0] += 1
+                colls[key][1] += b
+    mult = Counter({entry: 1.0})
+    order = [entry]
+    seen = {entry}
+    idx = 0
+    while idx < len(order):
+        c = order[idx]
+        idx += 1
+        for callee, mm in edges.get(c, []):
+            mult[callee] += mult[c] * mm
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+    rank = []
+    factors = {
+        "all-reduce": lambda n: 2 * (n - 1) / n,
+        "all-gather": lambda n: (n - 1) / n,
+        "reduce-scatter": lambda n: n - 1,
+        "all-to-all": lambda n: (n - 1) / n,
+        "collective-permute": lambda n: 1.0,
+    }
+    for (cname, op, shape, n), (cnt, b) in colls.items():
+        mm = mult.get(cname, 0)
+        f = factors.get(op.replace("-start", ""), lambda n: 1.0)(n) if n > 1 else 0.0
+        rank.append((b * mm * f, cnt * mm, op, shape, n, cname))
+    rank.sort(reverse=True)
+    total = sum(r[0] for r in rank)
+    return total, rank[:top_n]
+
+
+def main():
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    from repro.launch import dryrun as dr  # noqa: E402 (sets XLA_FLAGS first)
+
+    arch, shape = sys.argv[1], sys.argv[2]
+    top_n = int(sys.argv[3]) if len(sys.argv) > 3 else 12
+    # lower and grab HLO text via a one-off compile
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+
+    rec_holder = {}
+    orig = dr.analyze_hlo
+
+    def capture(txt):
+        rec_holder["hlo"] = txt
+        return orig(txt)
+
+    dr.analyze_hlo = capture
+    dr.lower_cell(arch, shape, multi_pod=False)
+    total, top = breakdown(rec_holder["hlo"], top_n)
+    print(f"total ici bytes/chip: {total/1e9:.1f} GB")
+    for b, cnt, op, shp, n, cname in top:
+        print(f"{b/1e9:8.2f}GB n={cnt:7.0f} grp={n:3d} {op:16s} {shp:48s} {cname[:36]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Collective-traffic extraction from post-SPMD HLO text.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective bytes;
+those are parsed here from ``compiled.as_text()``: every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+is matched, its result-shape byte count computed, and converted to
+*per-chip ICI bytes moved* with the standard ring-schedule factors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "collective_stats", "parse_hlo_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.:  %ag = bf16[4,2048,128]{2,1,0} all-gather(%x), replica_groups={{0,1,..}}
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9\[\],\s{}()]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")  # explicit list form
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")  # iota form
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[total]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict  # summed result-shape bytes per op kind
+    ici_bytes_per_chip: float  # ring-schedule per-chip traffic
+    total_result_bytes: float
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.counts[k]}, result={self.result_bytes[k]/1e6:.1f}MB"
+            for k in sorted(self.counts)
+        ]
+        return "; ".join(parts) or "no collectives"
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum byte sizes of every typed shape in the string (handles tuples)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def parse_hlo_collectives(hlo_text: str) -> list[dict]:
+    """One record per collective instruction: kind, result bytes, group size."""
+    records = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line and "-start" not in line:
+            continue  # avoid double counting start/done pairs
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        records.append({"kind": kind, "result_bytes": nbytes, "group": _group_size(line)})
+    return records
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    recs = parse_hlo_collectives(hlo_text)
+    counts: dict = {}
+    rbytes: dict = {}
+    ici = 0.0
+    for r in recs:
+        k, b, n = r["kind"], r["result_bytes"], max(r["group"], 1)
+        counts[k] = counts.get(k, 0) + 1
+        rbytes[k] = rbytes.get(k, 0.0) + b
+        if n <= 1:
+            continue
+        # ring-schedule per-chip bytes moved:
+        if k == "all-reduce":
+            ici += 2.0 * (n - 1) / n * b
+        elif k == "all-gather":
+            ici += (n - 1) / n * b  # b is the gathered (output) size
+        elif k == "reduce-scatter":
+            ici += (n - 1) * b  # b is the scattered (output) size
+        elif k == "all-to-all":
+            ici += (n - 1) / n * b
+        elif k == "collective-permute":
+            ici += b
+    return CollectiveStats(
+        counts=counts,
+        result_bytes=rbytes,
+        ici_bytes_per_chip=ici,
+        total_result_bytes=float(sum(rbytes.values())),
+    )

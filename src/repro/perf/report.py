@@ -1,0 +1,84 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+__all__ = ["load_cells", "roofline_table_md", "dryrun_summary_md"]
+
+
+def load_cells(results_dir: str | Path) -> list[dict]:
+    cells = []
+    for p in sorted(Path(results_dir).glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table_md(cells: list[dict], mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | useful ratio | roofline-MFU | HBM/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") == "skip":
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | — | — | — | SKIP | — | — | — |"
+            )
+            continue
+        if c.get("status") != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_roofline']*100:.2f}% | {r['hbm_gb_per_chip']:.1f}GB |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_summary_md(cells: list[dict]) -> str:
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skip = [c for c in cells if c.get("status") == "skip"]
+    err = [c for c in cells if c.get("status") == "error"]
+    lines = [
+        f"- cells compiled OK: **{len(ok)}** (both meshes); skipped: {len(skip)} "
+        f"(documented long_500k inapplicability); errors: {len(err)}",
+    ]
+    for mesh in ("16x16", "2x16x16"):
+        sub = [c for c in ok if c["mesh"] == mesh]
+        if not sub:
+            continue
+        worst = max(sub, key=lambda c: c["roofline"]["hbm_gb_per_chip"])
+        lines.append(
+            f"- {mesh}: {len(sub)} cells; max HBM/chip "
+            f"{worst['roofline']['hbm_gb_per_chip']:.1f}GB "
+            f"({worst['arch']} x {worst['shape']})"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load_cells(d)
+    print(dryrun_summary_md(cells))
+    print()
+    print("## single-pod (16x16)")
+    print(roofline_table_md(cells, "16x16"))
+    print()
+    print("## multi-pod (2x16x16)")
+    print(roofline_table_md(cells, "2x16x16"))

@@ -1,0 +1,126 @@
+"""Three-term roofline model for dry-run cells (assignment §ROOFLINE).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes from
+perf.hlo_stats over ``compiled.as_text()``.  The same MemoryTechSpec-style
+treatment the paper applies to O-SRAM-vs-E-SRAM is applied here to the TPU
+memory system (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.memory_tech import TPU_V5E, TpuSpec
+from repro.perf.hlo_stats import CollectiveStats
+
+__all__ = ["RooflineCell", "roofline_from_stats"]
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per-chip (cost_analysis on the SPMD module)
+    hlo_bytes: float  # per-chip HBM bytes accessed
+    collective_bytes: float  # global result bytes of collectives
+    ici_bytes_per_chip: float
+    model_flops: float  # 6*N*D (dense) / 6*N_active*D (MoE), global
+    peak_bytes_per_chip: float = 0.0  # memory_analysis: argument+output+temp
+
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self, hw: TpuSpec = TPU_V5E) -> "RooflineCell":
+        self.compute_s = self.hlo_flops / hw.peak_bf16_flops
+        self.memory_s = self.hlo_bytes / hw.hbm_bw
+        # assignment formula: collective_bytes / (chips * link_bw); we use
+        # the per-chip ring traffic over one link-pair bandwidth.
+        self.collective_s = self.ici_bytes_per_chip / hw.ici_bw_per_link
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time (perfect overlap = max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global): remat/redundancy waste metric."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-optimistic step time."""
+        denom = self.step_time_s * self.chips * TPU_V5E.peak_bf16_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "mfu_roofline": self.mfu,
+            "hbm_gb_per_chip": self.peak_bytes_per_chip / 2**30,
+        }
+
+
+def model_flops_for(cfg, shape_spec) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference; N = active params."""
+    n = cfg.active_param_count()
+    if shape_spec.kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n * tokens
+    if shape_spec.kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape_spec.global_batch
+
+
+def roofline_from_stats(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    coll: CollectiveStats,
+    model_flops: float,
+    peak_bytes: float = 0.0,
+) -> RooflineCell:
+    cell = RooflineCell(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=coll.total_result_bytes,
+        ici_bytes_per_chip=coll.ici_bytes_per_chip,
+        model_flops=model_flops,
+        peak_bytes_per_chip=peak_bytes,
+    )
+    return cell.finalize()

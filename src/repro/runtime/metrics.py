@@ -1,0 +1,20 @@
+"""Step metrics logging (stdout + in-memory ring for tests)."""
+
+from __future__ import annotations
+
+import time
+
+
+class MetricsLogger:
+    def __init__(self, prefix: str = "train"):
+        self.prefix = prefix
+        self.rows: list[dict] = []
+        self._t0 = time.time()
+
+    def log(self, step: int, **metrics):
+        row = {"step": step, "t": time.time() - self._t0, **metrics}
+        self.rows.append(row)
+        parts = " ".join(
+            f"{k}={v:.5g}" if isinstance(v, float) else f"{k}={v}" for k, v in metrics.items()
+        )
+        print(f"[{self.prefix}] step={step} {parts}", flush=True)

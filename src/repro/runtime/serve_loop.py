@@ -1,0 +1,112 @@
+"""Batched serving loop: continuous batching over a decode step.
+
+A minimal production-shaped server: requests (prompt token lists) are
+admitted into a fixed set of slots; each engine tick decodes one token for
+every active slot; finished sequences (eos or max_len) free their slot for
+the next queued request.  State layout matches models.transformer decode
+caches, so the same pjit shardings used in the dry-run apply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import init_decode_state, make_decode_fn
+from repro.models.transformer import forward
+
+__all__ = ["ServeConfig", "BatchServer"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_slots: int = 4
+    max_len: int = 64
+    eos_id: int = 1
+
+
+class BatchServer:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self.decode = jax.jit(make_decode_fn(cfg))
+        self.state = init_decode_state(cfg, serve_cfg.max_slots, serve_cfg.max_len,
+                                       cache_dtype=jnp.float32)
+        self.queue: deque = deque()
+        self.slots: list[dict | None] = [None] * serve_cfg.max_slots
+        self.current = jnp.zeros((serve_cfg.max_slots,), jnp.int32)
+        self.completed: list[dict] = []
+
+    # --- request admission ---------------------------------------------
+    def submit(self, request_id: str, prompt: Sequence[int]):
+        self.queue.append({"id": request_id, "prompt": list(prompt)})
+
+    def _admit(self):
+        for i in range(self.sc.max_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = {
+                    "id": req["id"],
+                    "prompt": req["prompt"],
+                    "pos": 0,
+                    "generated": [],
+                }
+                self._reset_slot(i)
+
+    def _reset_slot(self, i: int):
+        """Continuous batching: a reused slot restarts at position 0; its
+        per-sequence pos is reset and recurrent states are zeroed (KV cache
+        entries are overwritten as the new sequence advances and masked by
+        the per-sequence validity, so they need no explicit clear)."""
+        st = dict(self.state)
+        st["pos"] = self.state["pos"].at[i].set(0)
+        for key in ("wkv", "x_prev_t", "x_prev_c", "h", "conv_buf"):
+            if key in st:
+                st[key] = st[key].at[:, i].set(0)
+        self.state = st
+
+    # --- engine tick ------------------------------------------------------
+    def tick(self):
+        """Feed one token per active slot (prompt token or generated)."""
+        self._admit()
+        if not any(self.slots):
+            return False
+        tokens = np.zeros((self.sc.max_slots,), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if slot["pos"] < len(slot["prompt"]):
+                tokens[i] = slot["prompt"][slot["pos"]]
+            else:
+                tokens[i] = slot["generated"][-1]
+        logits, self.state = self.decode(self.params, jnp.asarray(tokens), self.state)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot["pos"] += 1
+            if slot["pos"] >= len(slot["prompt"]):
+                tok = int(nxt[i])
+                slot["generated"].append(tok)
+                done = tok == self.sc.eos_id or (
+                    slot["pos"] + len(slot["generated"]) >= self.sc.max_len
+                ) or len(slot["generated"]) >= self.sc.max_len - len(slot["prompt"])
+                if done:
+                    self.completed.append(
+                        {"id": slot["id"], "tokens": slot["generated"]}
+                    )
+                    self.slots[i] = None
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (any(self.slots) or self.queue) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.completed

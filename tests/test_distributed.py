@@ -1,0 +1,158 @@
+"""Multi-device semantics, run in a subprocess with 8 fake CPU devices
+(XLA fixes the device count at first init, so the parent process — which
+must stay single-device for the smoke tests — cannot host these)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+_SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(body: str):
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        assert jax.device_count() == 8
+        """
+    ) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True, env=env,
+        timeout=480,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}"
+    return res.stdout
+
+
+def test_mttkrp_sharded_matches_ref_both_schemes():
+    _run("""
+    from repro.core.sparse_tensor import random_sparse_tensor
+    from repro.core.mttkrp import mttkrp_ref
+    from repro.distributed.mttkrp_dist import mttkrp_sharded
+    t = random_sparse_tensor((97, 40, 33), nnz=1200, seed=3)
+    facs = [jax.random.normal(jax.random.PRNGKey(i), (s, 16)) for i, s in enumerate(t.shape)]
+    for mode in range(3):
+        want = np.asarray(mttkrp_ref(t, facs, mode))
+        for scheme in ("allreduce", "mode_ordered"):
+            got = np.asarray(mttkrp_sharded(t, facs, mode, scheme=scheme))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4), (mode, scheme)
+    print("OK")
+    """)
+
+
+def test_sharded_decode_attention_matches_unsharded():
+    _run("""
+    from repro.configs import reduced_config
+    from repro.models.attention import init_attention, decode_attention
+    from repro.distributed.decode import sharded_decode_attention
+    cfg = reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                         num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64,
+                         dtype=jnp.float32)
+    mesh = jax.make_mesh((8,), ("model",))
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    b, smax = 2, 32
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, smax, 2, 16)) * 0.0
+    v = k
+    pos = jnp.zeros((b,), jnp.int32)
+    ks, vs = k, v
+    kd, vd = k, v
+    for t in range(12):
+        x = jax.random.normal(jax.random.PRNGKey(100 + t), (b, 1, cfg.d_model))
+        want, kd, vd = decode_attention(params, cfg, x, kd, vd, pos)
+        got, ks, vs = sharded_decode_attention(params, cfg, mesh, x, ks, vs, pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+        pos = pos + 1
+    print("OK")
+    """)
+
+
+def test_compressed_psum_close_to_exact():
+    _run("""
+    from repro.distributed.collectives import compressed_psum
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((8,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+
+    exact = shard_map(lambda a: jax.lax.psum(a, "data"), mesh=mesh,
+                      in_specs=P("data", None), out_specs=P("data", None))(x)
+    comp = shard_map(lambda a: compressed_psum(a, "data"), mesh=mesh,
+                     in_specs=P("data", None), out_specs=P("data", None))(x)
+    rel = np.abs(np.asarray(comp) - np.asarray(exact)).max() / np.abs(np.asarray(exact)).max()
+    assert rel < 0.05, rel
+    print("OK")
+    """)
+
+
+def test_ring_allgather_matmul_matches_dense():
+    _run("""
+    from repro.distributed.collectives import ring_allgather_matmul
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((8,), ("model",))
+    m, k, n = 16, 32, 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    want = x @ w
+
+    def local(x_l, w_l):
+        return ring_allgather_matmul(x_l, w_l, "model", 8)
+
+    got = shard_map(local, mesh=mesh, in_specs=(P(None, None), P(None, "model")),
+                    out_specs=P(None, None), check_rep=False)(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    print("OK")
+    """)
+
+
+def test_elastic_checkpoint_restores_across_mesh_shapes(tmp_path):
+    _run(f"""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.runtime.checkpoint import save_checkpoint, restore_checkpoint
+    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+    mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+    w = jnp.arange(64.0).reshape(8, 8)
+    state = {{"params": {{"w": jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))}}}}
+    save_checkpoint(r"{tmp_path}", 1, state)
+    target_sh = {{"params": {{"w": NamedSharding(mesh_b, P("model", "data"))}}}}
+    restored, _ = restore_checkpoint(r"{tmp_path}", state, shardings=target_sh)
+    got = restored["params"]["w"]
+    assert got.sharding.mesh.shape["model"] == 4
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+    print("OK")
+    """)
+
+
+def test_train_step_under_pjit_small_mesh():
+    """End-to-end pjit train step on an (2 data, 4 model) mesh."""
+    _run("""
+    import functools
+    from repro.configs import reduced_config
+    from repro.models.model_zoo import init_model, make_train_step, input_specs
+    from repro.distributed.sharding import param_shardings, batch_shardings, train_state_shardings
+    from repro.optim.adamw import AdamW, init_adamw_state
+    cfg = reduced_config("granite-moe-1b-a400m", num_layers=2, d_model=32, d_ff=64,
+                         num_heads=4, num_kv_heads=4, head_dim=8, vocab_size=64,
+                         num_experts=4, top_k=2, moe_d_ff=32)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    state = init_adamw_state(params, lr=1e-3)
+    ssh = train_state_shardings(jax.eval_shape(lambda: state), cfg, mesh)
+    batch = {"tokens": jnp.ones((4, 16), jnp.int32), "labels": jnp.ones((4, 16), jnp.int32)}
+    bsh = batch_shardings(jax.eval_shape(lambda: batch), cfg, mesh)
+    step = make_train_step(cfg, AdamW(), num_microbatches=2)
+    with mesh:
+        f = jax.jit(step, in_shardings=(ssh, bsh), out_shardings=(ssh, None))
+        state2, metrics = f(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    print("OK")
+    """)

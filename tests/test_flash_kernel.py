@@ -1,0 +1,77 @@
+"""Pallas flash-attention kernel vs oracle (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _mk(b, s, h, kvh, d, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kvh, d), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,kvh", [(2, 2), (4, 1)])
+def test_flash_matches_ref(causal, h, kvh):
+    b, s, d = 2, 256, 32
+    q, k, v = _mk(b, s, h, kvh, d, seed=h)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=128, interpret=True)
+    kr = jnp.repeat(k, h // kvh, axis=2)
+    vr = jnp.repeat(v, h // kvh, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = kr.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = vr.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    want = attention_ref(qf, kf, vf, causal=causal)
+    want = want.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_uneven_seq_padding():
+    b, s, h, d = 1, 200, 2, 32  # not a multiple of blocks
+    q, k, v = _mk(b, s, h, h, d, seed=7)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_kv=64, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    want = attention_ref(qf, kf, vf, causal=False).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    h=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_flash_property_sweep(s, h, d, causal, seed):
+    q, k, v = _mk(1, s, h, h, d, seed=seed)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(h, s, d)
+    want = attention_ref(qf, kf, vf, causal=causal).reshape(1, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _mk(1, 128, 2, 2, 32, seed=3, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    qf = q.transpose(0, 2, 1, 3).reshape(2, 128, 32)
+    kf = k.transpose(0, 2, 1, 3).reshape(2, 128, 32)
+    vf = v.transpose(0, 2, 1, 3).reshape(2, 128, 32)
+    want = attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32), vf.astype(jnp.float32))
+    want = want.reshape(1, 2, 128, 32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=3e-2, atol=3e-2
+    )

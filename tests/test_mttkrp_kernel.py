@@ -1,0 +1,120 @@
+"""Pallas spMTTKRP kernel vs pure-jnp oracle (interpret=True on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mttkrp import dense_mttkrp_oracle, mttkrp_ref
+from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
+from repro.kernels.mttkrp import mttkrp_pallas
+from repro.kernels.mttkrp.ref import gather_factor_rows, mttkrp_plan_ref
+
+
+def _factors(shape, rank, seed=0, dtype=jnp.float32):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shape))
+    return [jax.random.normal(k, (s, rank), dtype) for k, s in zip(keys, shape)]
+
+
+def test_ref_matches_dense_oracle():
+    t = random_sparse_tensor((13, 7, 9), nnz=60, seed=1)
+    facs = _factors(t.shape, 4)
+    for mode in range(3):
+        got = np.asarray(mttkrp_ref(t, facs, mode))
+        want = dense_mttkrp_oracle(t.to_dense(), [np.asarray(f) for f in facs], mode)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_plan_ref_matches_raw_ref():
+    t = random_sparse_tensor((50, 40, 30), nnz=500, seed=2)
+    facs = _factors(t.shape, 16)
+    for mode in range(3):
+        plan = build_mttkrp_plan(t, mode, tile_nnz=64, rows_per_block=32)
+        gathered = gather_factor_rows(plan, facs)
+        got = mttkrp_plan_ref(
+            plan, jnp.asarray(plan.sorted_values), gathered, out_rows=t.shape[mode]
+        )
+        want = mttkrp_ref(t, facs, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_pallas_matches_ref_3mode(mode):
+    t = random_sparse_tensor((70, 33, 41), nnz=800, seed=3)
+    facs = _factors(t.shape, 16)
+    got = mttkrp_pallas(t, facs, mode, tile_nnz=128, rows_per_block=64, interpret=True)
+    want = mttkrp_ref(t, facs, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_4mode_and_5mode():
+    for nm, shape in [(4, (20, 15, 10, 8)), (5, (9, 8, 7, 6, 5))]:
+        t = random_sparse_tensor(shape, nnz=300, seed=nm)
+        facs = _factors(t.shape, 8)
+        for mode in range(nm):
+            got = mttkrp_pallas(t, facs, mode, tile_nnz=64, rows_per_block=32, interpret=True)
+            want = mttkrp_ref(t, facs, mode)
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+            )
+
+
+def test_pallas_bf16_inputs():
+    t = random_sparse_tensor((40, 30, 20), nnz=400, seed=7)
+    facs = _factors(t.shape, 16, dtype=jnp.bfloat16)
+    got = mttkrp_pallas(t, facs, 0, tile_nnz=128, rows_per_block=64, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = mttkrp_ref(t, [f.astype(jnp.float32) for f in facs], 0)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_empty_blocks_are_zeroed():
+    # Rows 100..199 of the output mode have no nonzeros -> their block must be 0.
+    idx = np.array([[0, 0, 0], [1, 1, 1], [250, 2, 2]], np.int32)
+    vals = np.array([1.0, 2.0, 3.0], np.float32)
+    from repro.core.sparse_tensor import SparseTensor
+
+    t = SparseTensor(idx, vals, (300, 4, 4))
+    facs = _factors(t.shape, 8, seed=9)
+    got = mttkrp_pallas(t, facs, 0, tile_nnz=64, rows_per_block=64, interpret=True)
+    want = mttkrp_ref(t, facs, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(got)[100:200] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    i0=st.integers(3, 60),
+    i1=st.integers(3, 40),
+    i2=st.integers(3, 40),
+    rank=st.sampled_from([1, 3, 8, 16, 24]),
+    nnz=st.integers(1, 400),
+    tile=st.sampled_from([8, 32, 128]),
+    rpb=st.sampled_from([8, 32, 128]),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_property_sweep(i0, i1, i2, rank, nnz, tile, rpb, mode, seed):
+    t = random_sparse_tensor((i0, i1, i2), nnz=nnz, seed=seed)
+    facs = _factors(t.shape, rank, seed=seed % 97)
+    got = mttkrp_pallas(t, facs, mode, tile_nnz=tile, rows_per_block=rpb, interpret=True)
+    want = mttkrp_ref(t, facs, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_plan_properties():
+    t = random_sparse_tensor((100, 50, 50), nnz=1000, seed=11)
+    plan = build_mttkrp_plan(t, 0, tile_nnz=32, rows_per_block=16)
+    # Non-decreasing tile->block map covering every block.
+    assert np.all(np.diff(plan.tile_block) >= 0)
+    assert set(plan.tile_block.tolist()) == set(range(plan.num_blocks))
+    # Every real nonzero preserved exactly once.
+    assert (plan.sorted_values != 0).sum() == (t.values != 0).sum()
+    # local_row consistent with sorted_indices and tile_block.
+    blk = plan.sorted_indices[:, 0] // plan.rows_per_block
+    np.testing.assert_array_equal(
+        plan.local_row, plan.sorted_indices[:, 0] - blk * plan.rows_per_block
+    )

@@ -1,0 +1,88 @@
+"""HLO parsing/cost tools + benchmark smoke."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # for `benchmarks`
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.perf.hlo_cost import analyze_hlo
+from repro.perf.hlo_stats import collective_stats
+
+_FAKE_HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %ar = f32[8,128] all-reduce(%x), replica_groups=[4,2]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128], b: f32[128,64]) -> f32[8,64] {
+  %a = f32[8,128] parameter(0)
+  %b = f32[128,64] parameter(1)
+  %t0 = (s32[], f32[8,128]) tuple(%c0, %a)
+  %w = (s32[], f32[8,128]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %x = f32[8,128] get-tuple-element(%w), index=1
+  ROOT %d = f32[8,64] dot(%x, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_hlo_cost_trip_count_multiplies_collectives():
+    cost = analyze_hlo(_FAKE_HLO)
+    assert cost.coll_counts["all-reduce"] == 10  # 1 AR x 10 trips
+    ar_bytes = 8 * 128 * 4
+    assert cost.coll_bytes["all-reduce"] == 10 * ar_bytes
+    # ring factor 2*(n-1)/n with group size 2
+    assert np.isclose(cost.ici_bytes, 10 * ar_bytes * 2 * (2 - 1) / 2)
+
+
+def test_hlo_cost_dot_flops():
+    cost = analyze_hlo(_FAKE_HLO)
+    # dot: 2 * 8 * 64 * 128 flops (+ elementwise adds inside the loop)
+    assert cost.flops >= 2 * 8 * 64 * 128
+    assert cost.flops < 2 * 8 * 64 * 128 + 10_000
+
+
+def test_collective_stats_iota_groups():
+    stats = collective_stats(_FAKE_HLO)
+    assert stats.counts["all-reduce"] == 1  # top-level text scan (no trips)
+    assert stats.result_bytes["all-reduce"] == 8 * 128 * 4
+
+
+def test_fast_benchmarks_produce_rows():
+    from benchmarks import fig7_speedup, fig8_energy, table3_energy, table4_area
+
+    for mod in (table3_energy, table4_area, fig7_speedup, fig8_energy):
+        rows = mod.run()
+        assert len(rows) >= 3
+        for name, value, _ in rows:
+            assert isinstance(name, str)
+
+
+def test_roofline_report_builds():
+    from repro.perf.report import dryrun_summary_md, load_cells, roofline_table_md
+
+    cells = load_cells("results/dryrun")
+    if not cells:
+        import pytest
+
+        pytest.skip("no dry-run artifacts yet")
+    md = roofline_table_md(cells)
+    assert "| arch |" in md
+    assert dryrun_summary_md(cells)

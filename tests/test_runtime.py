@@ -1,0 +1,164 @@
+"""Runtime layer: checkpoint/restore, fault-tolerant loop, serving, optim."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.data.lm_data import SyntheticLMStream
+from repro.models.model_zoo import init_model
+from repro.optim.adamw import AdamW, global_norm, init_adamw_state
+from repro.optim.grad_compress import Int8ErrorFeedback, dequantize_int8, quantize_int8
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.serve_loop import BatchServer, ServeConfig
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {
+        "params": {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))}},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    save_checkpoint(tmp_path, 7, state, extra_metadata={"stream_step": 3})
+    restored, meta = restore_checkpoint(tmp_path, state)
+    assert meta["stream_step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    state = {"x": jnp.zeros((2,))}
+    mgr = CheckpointManager(tmp_path, keep=2, save_every=1)
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, state)
+    assert latest_step(tmp_path) == 4
+    # only `keep` newest survive
+    kept = sorted(p.name for p in tmp_path.iterdir() if p.is_dir())
+    assert len(kept) == 2
+    # stale .tmp dirs never count as checkpoints
+    (tmp_path / "0000000099.tmp").mkdir()
+    assert latest_step(tmp_path) == 4
+
+
+def test_train_loop_runs_and_loss_drops(tmp_path):
+    cfg = reduced_config("internlm2-1.8b", num_layers=2, d_model=64, d_ff=128,
+                         num_heads=2, num_kv_heads=2, head_dim=32, vocab_size=128)
+    stream = SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    loop = TrainLoopConfig(total_steps=30, log_every=10, save_every=10,
+                           checkpoint_dir=str(tmp_path), lr=1e-2)
+    res = train(cfg, loop, stream=stream)
+    losses = [h["loss"] for h in res["history"]]
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path):
+    cfg = reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                         num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64)
+    mk = lambda: SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    loop = TrainLoopConfig(total_steps=10, save_every=5, checkpoint_dir=str(tmp_path))
+    train(cfg, loop, stream=mk())
+    # second run resumes from step 10 checkpoint and continues to 15
+    loop2 = TrainLoopConfig(total_steps=15, save_every=5, checkpoint_dir=str(tmp_path))
+    res = train(cfg, loop2, stream=mk())
+    assert res["resumed_from"] == 10
+    assert int(res["state"]["step"]) == 15
+
+
+def test_train_loop_survives_injected_faults(tmp_path):
+    cfg = reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                         num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64)
+    stream = SyntheticLMStream(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    faults = {"n": 0}
+
+    def fault_hook(step):
+        # one transient failure at step 3, twice (forcing a retry), once at 7
+        if step == 3 and faults["n"] < 2:
+            faults["n"] += 1
+            raise RuntimeError("injected preemption")
+        if step == 7 and faults["n"] == 2:
+            faults["n"] += 1
+            raise RuntimeError("injected node loss")
+
+    loop = TrainLoopConfig(total_steps=10, save_every=5, checkpoint_dir=str(tmp_path),
+                           max_step_retries=2)
+    res = train(cfg, loop, stream=stream, fault_hook=fault_hook)
+    assert int(res["state"]["step"]) == 10
+    assert faults["n"] == 3
+
+
+def test_adamw_descends_quadratic():
+    opt = AdamW(weight_decay=0.0, clip_norm=1e9)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    state = init_adamw_state({"w": jnp.zeros(3)}, lr=0.1)
+
+    def loss_fn(params, batch):
+        return jnp.sum((params["w"] - target) ** 2)
+
+    for _ in range(200):
+        loss, state, _ = opt.step(state, None, loss_fn)
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]), np.asarray(target), atol=0.15)
+
+
+def test_warmup_cosine_schedule():
+    f = warmup_cosine(10, 100)
+    assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(f(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_int8_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(256).astype(np.float32) * 1e-3)
+    comp = Int8ErrorFeedback()
+    state = comp.init_state({"params": {"w": jnp.zeros(256)}})
+    # accumulated compressed gradients track accumulated true gradients
+    acc = jnp.zeros(256)
+    for _ in range(50):
+        gc, state = comp.compress_tree({"w": g_true}, state)
+        acc = acc + gc["w"]
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(g_true * 50), rtol=0.05, atol=1e-4)
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.linspace(-3, 3, 301)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-9
+
+
+def test_batch_server_continuous_batching():
+    cfg = reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                         num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    srv = BatchServer(cfg, params, ServeConfig(max_slots=2, max_len=12, eos_id=-1))
+    for i in range(5):  # more requests than slots -> queueing + slot reuse
+        srv.submit(f"r{i}", [1 + i, 2, 3])
+    done = srv.run_until_drained()
+    assert sorted(d["id"] for d in done) == [f"r{i}" for i in range(5)]
+    assert all(len(d["tokens"]) > 0 for d in done)
+
+
+def test_server_slot_reuse_matches_fresh_decode():
+    """A request decoded in a reused slot must produce the same tokens as
+    the same request decoded in a fresh server (stale-state isolation)."""
+    cfg = reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                         num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompt = [5, 9, 2]
+
+    srv1 = BatchServer(cfg, params, ServeConfig(max_slots=1, max_len=10, eos_id=-1))
+    srv1.submit("a", [3, 3])
+    srv1.submit("b", prompt)
+    out1 = {d["id"]: d["tokens"] for d in srv1.run_until_drained()}
+
+    srv2 = BatchServer(cfg, params, ServeConfig(max_slots=1, max_len=10, eos_id=-1))
+    srv2.submit("b", prompt)
+    out2 = {d["id"]: d["tokens"] for d in srv2.run_until_drained()}
+    assert out1["b"] == out2["b"]
