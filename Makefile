@@ -1,0 +1,20 @@
+# Developer entry points (see README.md). All targets run offline.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke docs-check check
+
+test:
+	$(PY) -m pytest -x -q
+
+# Fast benchmark pass: paper tables/figures + a small DSE sweep.
+bench-smoke:
+	$(PY) -m benchmarks.run --skip-slow
+	$(PY) benchmarks/dse_sweep.py --axes frequency,wavelengths \
+		--tensors NELL-2,LBNL --out /tmp/BENCH_dse_smoke.json
+
+# Verify every `DESIGN.md §N` citation in the code resolves to a heading.
+docs-check:
+	$(PY) scripts/docs_check.py
+
+check: docs-check test

@@ -1,0 +1,186 @@
+"""Design-space exploration sweep driver (repro.dse, DESIGN.md §8).
+
+Sweeps memory-technology / cache axes over the FROSTT tensor set, prints
+markdown sweep tables and writes a ``BENCH_dse.json`` trajectory artifact.
+Runs fully offline (analytical model; no tensor downloads, no accelerator).
+
+Usage:
+    python benchmarks/dse_sweep.py --axes frequency,wavelengths --tensors all
+    python benchmarks/dse_sweep.py --axes frequency,cache_lines \\
+        --values frequency=5e9,20e9,40e9 --tensors NELL-2,PATENTS --base E-SRAM
+
+The E-SRAM/O-SRAM rows of the paper-pair section are checked to match
+``speedup_table()`` / ``energy_table()`` EXACTLY (bit-identical floats);
+the script exits nonzero if they do not.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core.memory_tech import E_SRAM, O_SRAM, TPU_V5E
+from repro.core.perf_model import energy_table, speedup_table
+from repro.data.frostt import FROSTT_TENSORS, PAPER_RANK
+from repro.dse import (
+    DEFAULT_AXIS_VALUES,
+    SWEEP_AXES,
+    HitRateCache,
+    SweepPoint,
+    SweepSpec,
+    compare_techs,
+    evaluate_sweep,
+    paper_pair_result,
+    tech_comparison,
+)
+from repro.perf.report import sweep_table_md
+
+BASE_TECHS = {"E-SRAM": E_SRAM, "O-SRAM": O_SRAM}
+
+
+def _parse_values(pairs: list[str], axes_names: list[str]) -> dict[str, list[float]]:
+    out: dict[str, list[float]] = {}
+    for pair in pairs:
+        axis, _, csv = pair.partition("=")
+        if not csv:
+            raise SystemExit(f"--values expects axis=v1,v2,... got {pair!r}")
+        if axis not in SWEEP_AXES:
+            raise SystemExit(f"--values: unknown axis {axis!r}; known: {sorted(SWEEP_AXES)}")
+        if axis not in axes_names:
+            raise SystemExit(
+                f"--values given for axis {axis!r} which is not in --axes ({axes_names})"
+            )
+        vals = [float(v) for v in csv.split(",")]
+        layer, _ = SWEEP_AXES[axis]
+        if layer != "tech" or axis in ("wavelengths", "port_width", "ports_per_block"):
+            vals = [int(v) if float(v).is_integer() else v for v in vals]
+        out[axis] = vals
+    return out
+
+
+def _select_tensors(arg: str):
+    if arg == "all":
+        return dict(FROSTT_TENSORS)
+    names = [n.strip() for n in arg.split(",") if n.strip()]
+    missing = [n for n in names if n not in FROSTT_TENSORS]
+    if missing:
+        raise SystemExit(f"unknown tensors {missing}; known: {sorted(FROSTT_TENSORS)}")
+    return {n: FROSTT_TENSORS[n] for n in names}
+
+
+def check_paper_pair(tensors, cache: HitRateCache) -> tuple[list[dict], bool]:
+    """Evaluate the 2-point paper sweep and verify exact table equality."""
+    res = paper_pair_result(tensors, cache=cache)
+    st = speedup_table(tensors)
+    et = energy_table(tensors)
+    exact = True
+    for name in tensors:
+        cell_e = res.cell("E-SRAM", name)
+        cell_o = res.cell("O-SRAM", name)
+        for m, ref in enumerate(st[name]):
+            exact &= cell_e.mode_seconds[m] == ref.t_esram.seconds
+            exact &= cell_o.mode_seconds[m] == ref.t_osram.seconds
+        exact &= cell_e.energy_j == et[name].e_esram_j
+        exact &= cell_o.energy_j == et[name].e_osram_j
+    return res.rows(baseline="E-SRAM"), exact
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--axes",
+        default="frequency,wavelengths",
+        help="comma list of sweep axes; known: " + ",".join(SWEEP_AXES),
+    )
+    ap.add_argument(
+        "--values",
+        action="append",
+        default=[],
+        metavar="AXIS=V1,V2,...",
+        help="override the default value grid for an axis (repeatable)",
+    )
+    ap.add_argument("--tensors", default="all", help="'all' or comma list of Table II names")
+    ap.add_argument("--base", default="O-SRAM", choices=sorted(BASE_TECHS))
+    ap.add_argument("--rank", type=int, default=PAPER_RANK)
+    ap.add_argument(
+        "--hit-rates",
+        default="che",
+        choices=["che", "trace", "auto"],
+        help="cache-model path per tensor (DESIGN.md §7)",
+    )
+    ap.add_argument("--no-tpu", action="store_true", help="skip the TPU-v5e roofline point")
+    ap.add_argument("--out", default="BENCH_dse.json", help="trajectory artifact path")
+    args = ap.parse_args(argv)
+
+    axes_names = [a.strip() for a in args.axes.split(",") if a.strip()]
+    unknown = [a for a in axes_names if a not in SWEEP_AXES]
+    if unknown:
+        raise SystemExit(f"unknown axes {unknown}; known: {sorted(SWEEP_AXES)}")
+    values = _parse_values(args.values, axes_names)
+    axes = {a: list(values.get(a, DEFAULT_AXIS_VALUES[a])) for a in axes_names}
+    tensors = _select_tensors(args.tensors)
+    cache = HitRateCache()
+
+    # --- 1. paper pair: the trivial 2-point sweep, checked exactly ---------
+    pair_rows, exact = check_paper_pair(tensors, cache)
+    print("## Paper pair (E-SRAM vs O-SRAM, Table II tensors)\n")
+    print(sweep_table_md(pair_rows))
+    print(f"\nexact match vs speedup_table()/energy_table(): {exact}\n")
+
+    # --- 2. the sweep ------------------------------------------------------
+    spec = SweepSpec(
+        axes=axes,
+        base_tech=BASE_TECHS[args.base],
+        rank=args.rank,
+    )
+    # Speedup/savings are reported against the UNSWEPT base configuration
+    # (the paper's own point), which joins the sweep as an explicit row.
+    base_point = SweepPoint(
+        label=f"{args.base} (paper base)", tech=BASE_TECHS[args.base], rank=args.rank
+    )
+    points = [base_point] + spec.points()
+    result = evaluate_sweep(
+        points, tensors, hit_rate_method=args.hit_rates, cache=cache
+    )
+    comparison = compare_techs(result, baseline=base_point.label)
+    print(f"## Sweep: base={args.base}, axes={axes_names} ({len(points)} points)\n")
+    print(sweep_table_md(comparison))
+    frontier = [r["config"] for r in comparison if r["pareto"]]
+    print(f"\nPareto frontier ({len(frontier)} configs): " + "; ".join(frontier) + "\n")
+
+    # --- 3. TPU-v5e as a third technology (roofline engine) ----------------
+    tpu_rows = []
+    if not args.no_tpu:
+        tpu = evaluate_sweep(tech_comparison([TPU_V5E]), tensors, cache=cache)
+        tpu_rows = tpu.rows()
+        print("## TPU-v5e-class roofline (third technology)\n")
+        print(sweep_table_md(tpu_rows))
+        print()
+
+    hit_stats = {"entries": len(cache), "hits": cache.hits, "misses": cache.misses}
+    print(f"hit-rate memo: {hit_stats}")
+
+    artifact = {
+        "benchmark": "dse_sweep",
+        "axes": {a: [float(v) for v in vs] for a, vs in axes.items()},
+        "base": args.base,
+        "rank": args.rank,
+        "tensors": sorted(tensors),
+        "hit_rate_method": args.hit_rates,
+        "paper_pair": {"rows": pair_rows, "exact_match": exact},
+        "sweep": comparison,
+        "pareto_frontier": frontier,
+        "tpu": tpu_rows,
+        "hit_rate_memo": hit_stats,
+    }
+    Path(args.out).write_text(json.dumps(artifact, indent=2))
+    print(f"wrote {args.out}")
+    return 0 if exact else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""Fail if any ``DESIGN.md §N`` citation lacks a matching DESIGN.md heading.
+
+Scans src/, tests/, benchmarks/ and examples/ for citations of the form
+``DESIGN.md §<number>`` and checks each cited section number appears in a
+markdown heading of DESIGN.md (e.g. ``## §7 — Cache modeling``).  Run via
+``make docs-check``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADING_RE = re.compile(r"^#{1,4}\s*§(\d+)\b", re.MULTILINE)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("docs-check: DESIGN.md is missing", file=sys.stderr)
+        return 1
+    headings = set(HEADING_RE.findall(design.read_text()))
+
+    citations: dict[str, list[str]] = {}
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            for sec in CITE_RE.findall(path.read_text()):
+                citations.setdefault(sec, []).append(str(path.relative_to(ROOT)))
+
+    missing = {s: files for s, files in citations.items() if s not in headings}
+    if missing:
+        for sec, files in sorted(missing.items()):
+            print(
+                f"docs-check: DESIGN.md §{sec} cited but no heading found "
+                f"(cited in: {', '.join(sorted(set(files)))})",
+                file=sys.stderr,
+            )
+        return 1
+    n_cites = sum(len(f) for f in citations.values())
+    print(
+        f"docs-check: OK — {n_cites} citations across {len(citations)} sections "
+        f"({', '.join('§' + s for s in sorted(citations, key=int))}), all resolve"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,7 +35,15 @@ from repro.core.memory_tech import (
 )
 from repro.data.frostt import FrosttTensor
 
-__all__ = ["AcceleratorConfig", "ModeTime", "mode_execution_time", "PAPER_ACCEL"]
+__all__ = [
+    "AcceleratorConfig",
+    "ModeTime",
+    "split_capacity_hit_rates",
+    "input_hit_rates",
+    "dram_traffic_per_nnz",
+    "mode_execution_time",
+    "PAPER_ACCEL",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,18 +102,19 @@ class ModeTime:
         return min(rates, key=rates.get)
 
 
-def _input_hit_rates(
-    tensor: FrosttTensor, mode: int, accel: AcceleratorConfig, rank: int
+def split_capacity_hit_rates(
+    tensor: FrosttTensor, mode: int, *, capacity_bytes: int, rank: int
 ) -> tuple[float, ...]:
-    """Hit rate per non-output factor via Che/LRU (full-size analytical path).
+    """Che/LRU hit rate per input factor for a shared row-cache capacity.
 
-    Caches are shared among input factor matrices (§IV: 'Each cache is
-    shared with multiple input factor matrices'): capacity is split evenly
-    across the N-1 input factors.
+    The capacity (whatever memory plays the factor-row cache — the FPGA
+    cache subsystem, or TPU VMEM in the roofline engine) is split evenly
+    across the N-1 input factor matrices (§IV: 'Each cache is shared with
+    multiple input factor matrices').
     """
     row_bytes = rank * 4
-    total_rows = accel.n_caches * accel.cache.capacity_bytes // row_bytes
-    n_inputs = tensor.nmodes - 1
+    total_rows = capacity_bytes // row_bytes
+    n_inputs = max(1, tensor.nmodes - 1)
     rows_per_input = max(1, total_rows // n_inputs)
     hits = []
     for k in range(tensor.nmodes):
@@ -115,6 +124,48 @@ def _input_hit_rates(
             che_hit_rate(tensor.dims[k], rows_per_input, zipf_alpha=tensor.zipf_alpha)
         )
     return tuple(hits)
+
+
+def input_hit_rates(
+    tensor: FrosttTensor, mode: int, accel: AcceleratorConfig, rank: int
+) -> tuple[float, ...]:
+    """Hit rate per non-output factor via Che/LRU (full-size analytical path).
+
+    The result depends only on the cache geometry (n_caches x capacity),
+    the tensor and the rank — NOT on the memory technology — which is what
+    makes it memoizable across sweep points (repro.dse.evaluator,
+    DESIGN.md §8).
+    """
+    return split_capacity_hit_rates(
+        tensor,
+        mode,
+        capacity_bytes=accel.n_caches * accel.cache.capacity_bytes,
+        rank=rank,
+    )
+
+
+def dram_traffic_per_nnz(
+    tensor: FrosttTensor,
+    mode: int,
+    hit_rates: tuple[float, ...],
+    *,
+    rank: int,
+    row_bytes: float,
+    value_bytes: int = 4,
+    index_bytes: int = 4,
+) -> tuple[float, float, float]:
+    """Paper §IV-A traffic per nonzero: (stream, factor-miss, output) bytes.
+
+    stream — the nonzero element itself (value + per-mode indices);
+    miss   — factor-row fills, only cache MISSES touch DRAM;
+    output — the output factor matrix, amortized over the nonzeros.
+    Shared by the FPGA model and the TPU roofline so the formula cannot
+    drift between technologies (DESIGN.md §2).
+    """
+    stream_bytes = value_bytes + tensor.nmodes * index_bytes
+    miss_bytes = sum((1.0 - h) for h in hit_rates) * row_bytes
+    out_bytes = tensor.dims[mode] * rank * value_bytes / tensor.nnz
+    return stream_bytes, miss_bytes, out_bytes
 
 
 def mode_execution_time(
@@ -137,7 +188,7 @@ def mode_execution_time(
 
     # --- cache / on-chip rate ----------------------------------------------
     if hit_rates is None:
-        hit_rates = _input_hit_rates(tensor, mode, accel, rank)
+        hit_rates = input_hit_rates(tensor, mode, accel, rank)
     # Requests per nonzero: one row load per input factor.
     # E-SRAM: each request occupies its cache ``base_request_occupancy``
     # cycles (64 B line through banked BRAM ports) plus ``miss_occupancy``
@@ -158,10 +209,15 @@ def mode_execution_time(
     rate_cache = min(rate_cache, lanes / requests_per_nnz)
 
     # --- DRAM rate (paper traffic formula, misses only for factor rows) ----
-    stream_bytes = accel.value_bytes + n * accel.index_bytes  # nonzero element
-    row_bytes = accel.cache.line_bytes  # one R=16 fp32 row == one line
-    miss_bytes = sum((1.0 - h) for h in hit_rates) * row_bytes
-    out_bytes = tensor.dims[mode] * rank * accel.value_bytes / nnz  # amortized
+    stream_bytes, miss_bytes, out_bytes = dram_traffic_per_nnz(
+        tensor,
+        mode,
+        hit_rates,
+        rank=rank,
+        row_bytes=accel.cache.line_bytes,  # one R=16 fp32 row == one line
+        value_bytes=accel.value_bytes,
+        index_bytes=accel.index_bytes,
+    )
     dram_bytes_per_nnz = stream_bytes + miss_bytes + out_bytes
     rate_dram = system.dram_bw / (dram_bytes_per_nnz * f)
 

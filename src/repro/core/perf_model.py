@@ -30,6 +30,7 @@ __all__ = [
     "ModeResult",
     "TensorEnergy",
     "run_mode",
+    "total_energy",
     "speedup_table",
     "energy_table",
     "area_table",
@@ -112,24 +113,33 @@ class TensorEnergy:
         return self.e_esram_j / self.e_osram_j
 
 
-def _total_energy(
+def total_energy(
     tensor: FrosttTensor,
     tech: MemoryTechSpec,
     *,
-    rank: int,
-    accel: AcceleratorConfig,
-    system: SystemConstants,
+    rank: int = PAPER_RANK,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    mode_times: tuple[ModeTime, ...] | None = None,
 ) -> tuple[float, dict]:
-    """Paper Eq (2): E = P_compute*t + E_DRAM + P_SRAM*n_SRAM*t (all modes)."""
+    """Paper Eq (2): E = P_compute*t + E_DRAM + P_SRAM*n_SRAM*t (all modes).
+
+    ``mode_times`` lets callers (repro.dse.evaluator) inject per-mode
+    execution times computed with memoized hit rates; when omitted they are
+    recomputed here, which yields bit-identical results.
+    """
+    if mode_times is None:
+        mode_times = tuple(
+            mode_execution_time(tensor, m, tech, rank=rank, accel=accel, system=system)
+            for m in range(tensor.nmodes)
+        )
     e_compute = 0.0
     e_dram = 0.0
     e_sram = 0.0
-    for mode in range(tensor.nmodes):
-        mt = mode_execution_time(tensor, mode, tech, rank=rank, accel=accel, system=system)
+    for mt in mode_times:
         t = mt.seconds
         e_compute += system.compute_power_w * t
         e_dram += mt.dram_bytes * system.dram_pj_per_byte * 1e-12
-        rate = mt.seconds and tensor.nnz / (t * system.f_electrical)
         active_bytes_per_cycle = mt.onchip_bytes_touched / (t * system.f_electrical)
         static_w, switching_w = sram_power_w(
             tech, active_bytes_per_cycle=active_bytes_per_cycle, system=system
@@ -150,8 +160,8 @@ def energy_table(
     tensors = tensors or FROSTT_TENSORS
     out = {}
     for name, t in tensors.items():
-        e_e, brk_e = _total_energy(t, E_SRAM, rank=rank, accel=accel, system=system)
-        e_o, brk_o = _total_energy(t, O_SRAM, rank=rank, accel=accel, system=system)
+        e_e, brk_e = total_energy(t, E_SRAM, rank=rank, accel=accel, system=system)
+        e_o, brk_o = total_energy(t, O_SRAM, rank=rank, accel=accel, system=system)
         out[name] = TensorEnergy(
             tensor=name,
             e_esram_j=e_e,

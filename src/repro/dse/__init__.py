@@ -1,0 +1,64 @@
+"""Design-space exploration over the paper's memory-technology model.
+
+The paper's headline numbers (Fig 7 speedup, Fig 8 energy) are two points
+in a larger design space — frequency, WDM wavelength count, port width,
+cache geometry, PE count, DRAM channels, rank.  This package makes those
+axes sweepable (DESIGN.md §8):
+
+  * ``repro.dse.sweep``     — ``SweepSpec``/``SweepPoint``: grids of
+    parameter overrides over the base ``MemoryTechSpec`` /
+    ``AcceleratorConfig`` / ``SystemConstants``; the paper's E-SRAM vs
+    O-SRAM comparison is the trivial 2-point sweep (``paper_pair``);
+  * ``repro.dse.evaluator`` — prices every (point, tensor, mode) cell via
+    ``repro.core`` with hit rates memoized per cache geometry (they never
+    depend on the memory technology), choosing exact LRU trace simulation
+    or the Che approximation per tensor;
+  * ``repro.dse.pareto``    — the time-vs-energy comparison layer:
+    Pareto frontier, ranking, and baseline-relative speedup/savings.
+
+TPU-v5e participates as a third technology through the roofline engine
+(``repro.perf.roofline.mttkrp_tpu_roofline``); sweep tables render through
+``repro.perf.report``; ``benchmarks/dse_sweep.py`` is the CLI driver.
+"""
+
+from repro.dse.evaluator import (
+    HitRateCache,
+    PointTensorResult,
+    SweepResult,
+    evaluate_sweep,
+    exact_hit_rates,
+)
+from repro.dse.pareto import (
+    ParetoPoint,
+    compare_techs,
+    paper_pair_result,
+    pareto_frontier,
+    rank_configurations,
+)
+from repro.dse.sweep import (
+    DEFAULT_AXIS_VALUES,
+    SWEEP_AXES,
+    SweepPoint,
+    SweepSpec,
+    paper_pair,
+    tech_comparison,
+)
+
+__all__ = [
+    "DEFAULT_AXIS_VALUES",
+    "SWEEP_AXES",
+    "SweepPoint",
+    "SweepSpec",
+    "paper_pair",
+    "tech_comparison",
+    "HitRateCache",
+    "PointTensorResult",
+    "SweepResult",
+    "evaluate_sweep",
+    "exact_hit_rates",
+    "ParetoPoint",
+    "pareto_frontier",
+    "rank_configurations",
+    "compare_techs",
+    "paper_pair_result",
+]

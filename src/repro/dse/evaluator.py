@@ -1,0 +1,327 @@
+"""Vectorized sweep evaluation with memoized cache-hit-rate results.
+
+Pricing one ``SweepPoint`` for one (tensor, mode) runs the paper's model
+(``repro.core.accelerator.mode_execution_time`` + ``repro.core.perf_model``
+energy) — cheap arithmetic EXCEPT for the cache hit rates, which need
+either a Che fixed-point solve or an exact LRU trace simulation
+(``repro.core.cache_sim``, DESIGN.md §7).  Hit rates depend only on the
+cache geometry, the tensor and the rank — never on the memory technology —
+so a ``HitRateCache`` keyed by that tuple turns an A×B×…-point sweep into
+one hit-rate solve per (geometry, tensor, mode) plus pure arithmetic per
+point (DESIGN.md §8).
+
+Hit-rate methods, chosen per tensor:
+  * ``"che"``   — Che's LRU approximation on the full-size Table II
+    characteristics (the analytical path; what the paper tables use);
+  * ``"trace"`` — exact set-associative LRU simulation over an executable
+    tensor's mode-ordered index trace (small / synthetic tensors);
+  * ``"auto"``  — ``"trace"`` when the tensor's nonzero count is within
+    ``trace_nnz_limit`` (simulation cost is O(nnz·modes)), else ``"che"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+from repro.core.accelerator import AcceleratorConfig, ModeTime, input_hit_rates, mode_execution_time
+from repro.core.cache_sim import CacheConfig, simulate_trace
+from repro.core.perf_model import total_energy
+from repro.core.sparse_tensor import SparseTensor
+from repro.data.frostt import FROSTT_TENSORS, FrosttTensor
+from repro.dse.sweep import SweepPoint
+from repro.perf.roofline import TpuModeTime, mttkrp_tpu_roofline
+
+__all__ = [
+    "HitRateCache",
+    "PointTensorResult",
+    "SweepResult",
+    "exact_hit_rates",
+    "evaluate_sweep",
+]
+
+# Above this nonzero count the exact LRU simulation (python-loop over the
+# trace) is slower than the Che solve by orders of magnitude; "auto" falls
+# back to the approximation (DESIGN.md §7).
+TRACE_NNZ_LIMIT = 200_000
+
+
+def exact_hit_rates(
+    tensor: SparseTensor,
+    mode: int,
+    accel: AcceleratorConfig,
+    rank: int,
+) -> tuple[float, ...]:
+    """Exact LRU hit rate per input factor over the mode-ordered trace.
+
+    Mirrors the capacity split of ``input_hit_rates``: the combined cache
+    capacity is divided evenly across the N-1 input factor matrices, and
+    each input's row-index column of the (output-mode-sorted) nonzero
+    stream is simulated against its share.
+    """
+    row_bytes = rank * 4
+    line_bytes = accel.cache.line_bytes
+    lines_per_row = max(1, -(-row_bytes // line_bytes))
+    total_rows = accel.n_caches * accel.cache.capacity_bytes // row_bytes
+    n_inputs = max(1, tensor.nmodes - 1)
+    rows_per_input = max(1, total_rows // n_inputs)
+
+    assoc = min(accel.cache.associativity, rows_per_input * lines_per_row)
+    num_lines = rows_per_input * lines_per_row
+    num_lines = max(assoc, -(-num_lines // assoc) * assoc)  # multiple of assoc
+    cfg = CacheConfig(num_lines=num_lines, line_bytes=line_bytes, associativity=assoc)
+
+    ordered = tensor.mode_sorted(mode)
+    hits = []
+    for k in range(tensor.nmodes):
+        if k == mode:
+            continue
+        stats = simulate_trace(ordered.indices[:, k], cfg, row_bytes=row_bytes)
+        hits.append(stats.hit_rate)
+    return tuple(hits)
+
+
+class HitRateCache:
+    """Memo for per-(cache geometry, tensor, mode, rank, method) hit rates.
+
+    ``hits``/``misses`` count lookups so tests (and the benchmark's
+    trajectory artifact) can verify the memoization is actually working.
+    """
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, tuple[float, ...]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(
+        self,
+        tensor: FrosttTensor,
+        mode: int,
+        accel: AcceleratorConfig,
+        rank: int,
+        *,
+        method: str = "che",
+        trace: SparseTensor | None = None,
+        trace_nnz_limit: int = TRACE_NNZ_LIMIT,
+    ) -> tuple[float, ...]:
+        if method == "auto":
+            executable = trace if trace is not None else _executable_for(tensor)
+            if executable is not None and executable.nnz <= trace_nnz_limit:
+                method, trace = "trace", executable
+            else:
+                method = "che"
+        # For the trace method the tensor NAME is not enough: a shared
+        # cache may see different trace tensors under the same name, so
+        # fingerprint the trace object itself.
+        trace_key = (
+            (id(trace), trace.nnz, trace.shape)
+            if (method == "trace" and trace is not None)
+            else None
+        )
+        key = (
+            tensor.name,
+            mode,
+            rank,
+            method,
+            trace_key,
+            accel.n_caches,
+            accel.cache.num_lines,
+            accel.cache.line_bytes,
+            accel.cache.associativity,
+        )
+        if key in self._store:
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        if method == "che":
+            rates = input_hit_rates(tensor, mode, accel, rank)
+        elif method == "trace":
+            if trace is None:
+                trace = _executable_for(tensor)
+            if trace is None:
+                raise ValueError(
+                    f"no executable trace available for {tensor.name!r}; "
+                    "pass trace_tensors= or use method='che'"
+                )
+            rates = exact_hit_rates(trace, mode, accel, rank)
+        else:
+            raise ValueError(f"unknown hit-rate method {method!r}")
+        self._store[key] = rates
+        return rates
+
+
+@functools.lru_cache(maxsize=None)
+def _executable_for_name(name: str) -> SparseTensor | None:
+    """Scaled executable stand-in for a Table II tensor (DESIGN.md §7)."""
+    if name not in FROSTT_TENSORS:
+        return None
+    from repro.data.synthetic_tensors import make_frostt_like
+
+    return make_frostt_like(name, scale=1e-3, seed=0)
+
+
+def _executable_for(tensor: FrosttTensor) -> SparseTensor | None:
+    return _executable_for_name(tensor.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class PointTensorResult:
+    """One (configuration, tensor) cell of a sweep."""
+
+    label: str
+    tensor: str
+    mode_times: tuple[ModeTime | TpuModeTime, ...]
+    energy_j: float | None  # None for TPU points (no Eq-2 constants)
+    energy_breakdown: dict | None
+
+    @property
+    def seconds(self) -> float:
+        return sum(mt.seconds for mt in self.mode_times)
+
+    @property
+    def mode_seconds(self) -> tuple[float, ...]:
+        return tuple(mt.seconds for mt in self.mode_times)
+
+    @property
+    def bottlenecks(self) -> tuple[str, ...]:
+        return tuple(mt.bottleneck for mt in self.mode_times)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """All (point, tensor) cells of a sweep + the shared hit-rate memo."""
+
+    results: list[PointTensorResult]
+    cache: HitRateCache
+
+    def cell(self, label: str, tensor: str) -> PointTensorResult:
+        for r in self.results:
+            if r.label == label and r.tensor == tensor:
+                return r
+        raise KeyError((label, tensor))
+
+    def labels(self) -> list[str]:
+        out: list[str] = []
+        for r in self.results:
+            if r.label not in out:
+                out.append(r.label)
+        return out
+
+    def aggregate(self) -> dict[str, tuple[float, float | None]]:
+        """Per-configuration (total seconds, total joules) across tensors.
+
+        Energy is ``None`` if any cell has no energy model (TPU points).
+        """
+        agg: dict[str, tuple[float, float | None]] = {}
+        for r in self.results:
+            t, e = agg.get(r.label, (0.0, 0.0))
+            e = None if (e is None or r.energy_j is None) else e + r.energy_j
+            agg[r.label] = (t + r.seconds, e)
+        return agg
+
+    def rows(self, *, baseline: str | None = None) -> list[dict]:
+        """Flat dict rows for ``repro.perf.report.sweep_table_md``."""
+        base: dict[str, PointTensorResult] = {}
+        if baseline is not None:
+            base = {r.tensor: r for r in self.results if r.label == baseline}
+        rows = []
+        for r in self.results:
+            row: dict = {
+                "config": r.label,
+                "tensor": r.tensor,
+                "time_s": r.seconds,
+                "energy_j": r.energy_j,
+                "bottlenecks": "/".join(r.bottlenecks),
+            }
+            b = base.get(r.tensor)
+            if b is not None:
+                row["speedup_vs_" + baseline] = b.seconds / r.seconds
+                if b.energy_j is not None and r.energy_j is not None:
+                    row["energy_savings_vs_" + baseline] = b.energy_j / r.energy_j
+            rows.append(row)
+        return rows
+
+
+def evaluate_sweep(
+    points: Sequence[SweepPoint],
+    tensors: Mapping[str, FrosttTensor] | None = None,
+    *,
+    hit_rate_method: str = "che",
+    trace_tensors: Mapping[str, SparseTensor] | None = None,
+    trace_nnz_limit: int = TRACE_NNZ_LIMIT,
+    cache: HitRateCache | None = None,
+) -> SweepResult:
+    """Price every (point, tensor, mode) cell of a sweep.
+
+    The hit-rate memo is shared across all points, so techs/frequencies/
+    wavelength counts that share a cache geometry reuse the same solve.
+    FPGA points get the full Eq-2 energy model; TPU points (``is_tpu``)
+    are priced by the roofline engine and carry no energy.
+    """
+    tensors = tensors or FROSTT_TENSORS
+    trace_tensors = trace_tensors or {}
+    # NB: an empty HitRateCache is falsy (__len__), so test identity.
+    cache = cache if cache is not None else HitRateCache()
+    results: list[PointTensorResult] = []
+    for point in points:
+        for name, tensor in tensors.items():
+            if point.is_tpu:
+                mts: tuple = tuple(
+                    mttkrp_tpu_roofline(tensor, m, rank=point.rank, hw=point.tech)
+                    for m in range(tensor.nmodes)
+                )
+                results.append(
+                    PointTensorResult(
+                        label=point.label,
+                        tensor=name,
+                        mode_times=mts,
+                        energy_j=None,
+                        energy_breakdown=None,
+                    )
+                )
+                continue
+            mode_times = []
+            for m in range(tensor.nmodes):
+                hr = cache.get(
+                    tensor,
+                    m,
+                    point.accel,
+                    point.rank,
+                    method=hit_rate_method,
+                    trace=trace_tensors.get(name),
+                    trace_nnz_limit=trace_nnz_limit,
+                )
+                mode_times.append(
+                    mode_execution_time(
+                        tensor,
+                        m,
+                        point.tech,
+                        rank=point.rank,
+                        accel=point.accel,
+                        system=point.system,
+                        hit_rates=hr,
+                    )
+                )
+            mts = tuple(mode_times)
+            energy, breakdown = total_energy(
+                tensor,
+                point.tech,
+                rank=point.rank,
+                accel=point.accel,
+                system=point.system,
+                mode_times=mts,
+            )
+            results.append(
+                PointTensorResult(
+                    label=point.label,
+                    tensor=name,
+                    mode_times=mts,
+                    energy_j=energy,
+                    energy_breakdown=breakdown,
+                )
+            )
+    return SweepResult(results=results, cache=cache)

@@ -1,0 +1,216 @@
+"""Sweepable design-space axes over the paper's configuration dataclasses.
+
+A ``SweepSpec`` is a grid (cartesian product) of parameter overrides
+applied on top of a base configuration (``MemoryTechSpec`` +
+``AcceleratorConfig``/``CacheConfig`` + ``SystemConstants`` + rank).  Each
+grid cell materializes as a frozen ``SweepPoint`` — a fully-resolved
+configuration the evaluator can price (DESIGN.md §8).
+
+Axes are named in ``SWEEP_AXES``; each maps to a (layer, field) pair and
+is applied with ``dataclasses.replace`` so the base specs stay immutable.
+The paper's own E-SRAM/O-SRAM comparison is the trivial two-point sweep
+returned by ``paper_pair``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Mapping, Sequence
+
+from repro.core.accelerator import PAPER_ACCEL, AcceleratorConfig
+from repro.core.cache_sim import CacheConfig
+from repro.core.memory_tech import (
+    E_SRAM,
+    O_SRAM,
+    PAPER_SYSTEM,
+    MemoryTechSpec,
+    SystemConstants,
+    TpuSpec,
+)
+from repro.data.frostt import PAPER_RANK
+
+__all__ = [
+    "SWEEP_AXES",
+    "DEFAULT_AXIS_VALUES",
+    "SweepPoint",
+    "SweepSpec",
+    "paper_pair",
+    "tech_comparison",
+]
+
+
+# axis name -> (layer, dataclass field).  Layers: "tech" (MemoryTechSpec),
+# "cache" (AcceleratorConfig.cache), "accel" (AcceleratorConfig),
+# "system" (SystemConstants), "run" (evaluation parameters, i.e. rank).
+SWEEP_AXES: dict[str, tuple[str, str]] = {
+    "frequency": ("tech", "frequency_hz"),
+    "wavelengths": ("tech", "wavelengths"),
+    "port_width": ("tech", "port_width_bits"),
+    "ports_per_block": ("tech", "ports_per_block"),
+    "cache_lines": ("cache", "num_lines"),
+    "line_bytes": ("cache", "line_bytes"),
+    "associativity": ("cache", "associativity"),
+    "n_caches": ("accel", "n_caches"),
+    "n_pe": ("accel", "n_pe"),
+    "pipelines": ("accel", "pipelines_per_pe"),
+    "dram_channels": ("system", "dram_channels"),
+    "f_electrical": ("system", "f_electrical"),
+    "rank": ("run", "rank"),
+}
+
+# Default value grids used by benchmarks/dse_sweep.py when the caller
+# names an axis without giving explicit values.  Base-point values are
+# included so every sweep contains the paper configuration itself.
+DEFAULT_AXIS_VALUES: dict[str, tuple[Any, ...]] = {
+    "frequency": (1e9, 5e9, 10e9, 20e9, 40e9),
+    "wavelengths": (1, 2, 4, 5, 8, 16),
+    "port_width": (16, 32, 64),
+    "ports_per_block": (1, 2, 4),
+    "cache_lines": (1024, 2048, 4096, 8192, 16384),
+    "line_bytes": (32, 64, 128),
+    "associativity": (1, 2, 4, 8),
+    "n_caches": (1, 3, 6),
+    "n_pe": (2, 4, 8),
+    "pipelines": (40, 80, 160),
+    "dram_channels": (2, 4, 8),
+    "f_electrical": (250e6, 500e6, 1e9),
+    "rank": (8, 16, 32),
+}
+
+
+def _fmt_value(v: Any) -> str:
+    if isinstance(v, float) and v >= 1e6:
+        return f"{v/1e9:g}GHz" if v >= 1e9 else f"{v/1e6:g}MHz"
+    return f"{v:g}" if isinstance(v, float) else str(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One fully-resolved configuration of the design space.
+
+    ``tech`` is a ``MemoryTechSpec`` (FPGA memory technologies) or a
+    ``TpuSpec`` — the evaluator dispatches on the type so a TPU-v5e-class
+    chip participates as a third technology via the roofline engine.
+    """
+
+    label: str
+    tech: MemoryTechSpec | TpuSpec
+    accel: AcceleratorConfig = PAPER_ACCEL
+    system: SystemConstants = PAPER_SYSTEM
+    rank: int = PAPER_RANK
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+    @property
+    def is_tpu(self) -> bool:
+        return isinstance(self.tech, TpuSpec)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Grid of overrides over a base configuration.
+
+    ``axes`` maps axis names (keys of ``SWEEP_AXES``) to value sequences;
+    ``points()`` yields the cartesian product.  Axis order follows the
+    mapping's insertion order, so the first axis varies slowest.
+    """
+
+    axes: Mapping[str, Sequence[Any]]
+    base_tech: MemoryTechSpec = O_SRAM
+    base_accel: AcceleratorConfig = PAPER_ACCEL
+    base_system: SystemConstants = PAPER_SYSTEM
+    rank: int = PAPER_RANK
+
+    def __post_init__(self):
+        unknown = [a for a in self.axes if a not in SWEEP_AXES]
+        if unknown:
+            raise ValueError(
+                f"unknown sweep axes {unknown}; known: {sorted(SWEEP_AXES)}"
+            )
+
+    def num_points(self) -> int:
+        n = 1
+        for vals in self.axes.values():
+            n *= len(vals)
+        return n
+
+    def points(self) -> list[SweepPoint]:
+        names = list(self.axes)
+        out = []
+        for combo in itertools.product(*(self.axes[a] for a in names)):
+            overrides = tuple(zip(names, combo))
+            tech, accel, system, rank = self._apply(overrides)
+            label = f"{self.base_tech.name}[" + ",".join(
+                f"{a}={_fmt_value(v)}" for a, v in overrides
+            ) + "]"
+            out.append(
+                SweepPoint(
+                    label=label,
+                    tech=tech,
+                    accel=accel,
+                    system=system,
+                    rank=rank,
+                    overrides=overrides,
+                )
+            )
+        return out
+
+    def _apply(
+        self, overrides: tuple[tuple[str, Any], ...]
+    ) -> tuple[MemoryTechSpec, AcceleratorConfig, SystemConstants, int]:
+        tech_kw: dict[str, Any] = {}
+        cache_kw: dict[str, Any] = {}
+        accel_kw: dict[str, Any] = {}
+        system_kw: dict[str, Any] = {}
+        rank = self.rank
+        for axis, value in overrides:
+            layer, field = SWEEP_AXES[axis]
+            if layer == "tech":
+                tech_kw[field] = value
+            elif layer == "cache":
+                cache_kw[field] = value
+            elif layer == "accel":
+                accel_kw[field] = value
+            elif layer == "system":
+                system_kw[field] = value
+            else:  # run
+                rank = int(value)
+        tech = dataclasses.replace(self.base_tech, **tech_kw) if tech_kw else self.base_tech
+        accel = self.base_accel
+        if cache_kw:
+            accel_kw["cache"] = dataclasses.replace(accel.cache, **cache_kw)
+        if accel_kw:
+            accel = dataclasses.replace(accel, **accel_kw)
+        system = (
+            dataclasses.replace(self.base_system, **system_kw)
+            if system_kw
+            else self.base_system
+        )
+        return tech, accel, system, rank
+
+
+def paper_pair(
+    *,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    rank: int = PAPER_RANK,
+) -> list[SweepPoint]:
+    """The paper's E-SRAM/O-SRAM comparison as the trivial 2-point sweep."""
+    return [
+        SweepPoint(label=E_SRAM.name, tech=E_SRAM, accel=accel, system=system, rank=rank),
+        SweepPoint(label=O_SRAM.name, tech=O_SRAM, accel=accel, system=system, rank=rank),
+    ]
+
+
+def tech_comparison(
+    techs: Sequence[MemoryTechSpec | TpuSpec],
+    *,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    rank: int = PAPER_RANK,
+) -> list[SweepPoint]:
+    """A list-sweep over arbitrary technology specs (incl. ``TpuSpec``)."""
+    return [
+        SweepPoint(label=t.name, tech=t, accel=accel, system=system, rank=rank)
+        for t in techs
+    ]

@@ -1,11 +1,23 @@
-"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun."""
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.
+
+Also renders ``repro.dse`` sweep results (DESIGN.md §8): a generic
+markdown-table renderer (``sweep_table_md``) plus a JSON serializer
+(``sweep_table_json``) used by ``benchmarks/dse_sweep.py`` to emit the
+``BENCH_dse.json`` trajectory artifact.
+"""
 
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
-__all__ = ["load_cells", "roofline_table_md", "dryrun_summary_md"]
+__all__ = [
+    "load_cells",
+    "roofline_table_md",
+    "dryrun_summary_md",
+    "sweep_table_md",
+    "sweep_table_json",
+]
 
 
 def load_cells(results_dir: str | Path) -> list[dict]:
@@ -47,6 +59,49 @@ def roofline_table_md(cells: list[dict], mesh: str = "16x16") -> str:
             f"{r['mfu_roofline']*100:.2f}% | {r['hbm_gb_per_chip']:.1f}GB |"
         )
     return "\n".join(rows)
+
+
+def _fmt_cell(x) -> str:
+    if x is None:
+        return "—"
+    if isinstance(x, bool):
+        return "yes" if x else "no"
+    if isinstance(x, float):
+        if x == 0.0:
+            return "0"
+        if abs(x) >= 1e4 or abs(x) < 1e-3:
+            return f"{x:.3e}"
+        return f"{x:.4g}"
+    return str(x)
+
+
+def sweep_table_md(rows: list[dict], columns: list[str] | None = None) -> str:
+    """Render DSE sweep rows (list of flat dicts) as a markdown table.
+
+    ``columns`` fixes the order; by default the union of keys in
+    first-seen order is used so heterogeneous rows (e.g. TPU rows with no
+    energy) still render, with missing cells shown as ``—``.
+    """
+    if not rows:
+        return "(empty sweep)"
+    if columns is None:
+        columns = []
+        for r in rows:
+            for k in r:
+                if k not in columns:
+                    columns.append(k)
+    out = [
+        "| " + " | ".join(columns) + " |",
+        "|" + "---|" * len(columns),
+    ]
+    for r in rows:
+        out.append("| " + " | ".join(_fmt_cell(r.get(c)) for c in columns) + " |")
+    return "\n".join(out)
+
+
+def sweep_table_json(rows: list[dict], *, meta: dict | None = None) -> str:
+    """Serialize sweep rows (+ optional run metadata) to pretty JSON."""
+    return json.dumps({"meta": meta or {}, "rows": rows}, indent=2, sort_keys=False)
 
 
 def dryrun_summary_md(cells: list[dict]) -> str:

@@ -8,16 +8,29 @@ FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes from
 perf.hlo_stats over ``compiled.as_text()``.  The same MemoryTechSpec-style
 treatment the paper applies to O-SRAM-vs-E-SRAM is applied here to the TPU
 memory system (DESIGN.md §2).
+
+``mttkrp_tpu_roofline`` is the analytical counterpart for the paper's
+workload: it prices one spMTTKRP mode on the TPU memory system (VMEM as
+the factor-row cache, HBM as the streaming store) so a TPU-v5e-class chip
+can participate as a third memory technology in ``repro.dse`` sweeps
+(DESIGN.md §8).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+from repro.core.accelerator import dram_traffic_per_nnz, split_capacity_hit_rates
 from repro.core.memory_tech import TPU_V5E, TpuSpec
+from repro.data.frostt import FrosttTensor
 from repro.perf.hlo_stats import CollectiveStats
 
-__all__ = ["RooflineCell", "roofline_from_stats"]
+__all__ = [
+    "RooflineCell",
+    "TpuModeTime",
+    "mttkrp_tpu_roofline",
+    "roofline_from_stats",
+]
 
 
 @dataclasses.dataclass
@@ -85,6 +98,73 @@ class RooflineCell:
             "mfu_roofline": self.mfu,
             "hbm_gb_per_chip": self.peak_bytes_per_chip / 2**30,
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuModeTime:
+    """Roofline time for one spMTTKRP mode on a TPU-class memory system.
+
+    Mirrors ``repro.core.accelerator.ModeTime`` closely enough for the DSE
+    comparison layer: ``seconds`` + a ``bottleneck`` label + the HBM
+    traffic.  Collectives are zero for the single-chip roofline.
+    """
+
+    mode: int
+    compute_s: float
+    memory_s: float
+    hit_rates: tuple[float, ...]
+    hbm_bytes: float
+
+    @property
+    def seconds(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def bottleneck(self) -> str:
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+
+def mttkrp_tpu_roofline(
+    tensor: FrosttTensor,
+    mode: int,
+    *,
+    rank: int = 16,
+    hw: TpuSpec = TPU_V5E,
+) -> TpuModeTime:
+    """Price one spMTTKRP mode on a TPU chip with the paper's traffic model.
+
+    The same two-resource treatment the paper applies to the FPGA is
+    applied to the TPU memory system (DESIGN.md §2):
+
+      * compute term — the paper's N*|T|*R elementary ops against the
+        chip's peak FLOP/s;
+      * memory term  — the §IV-A DRAM-traffic formula against HBM
+        bandwidth, with VMEM playing the role of the factor-row cache:
+        its capacity is split across the N-1 input factors and the Che/LRU
+        approximation prices the reuse, exactly as for the on-chip caches
+        (DESIGN.md §7).
+    """
+    n = tensor.nmodes
+    flops = float(n) * tensor.nnz * rank
+    compute_s = flops / hw.peak_bf16_flops
+
+    # Same helpers as the FPGA model, with VMEM as the shared row cache.
+    hits = split_capacity_hit_rates(
+        tensor, mode, capacity_bytes=hw.vmem_bytes, rank=rank
+    )
+    stream_bytes, miss_bytes, out_bytes = dram_traffic_per_nnz(
+        tensor, mode, hits, rank=rank, row_bytes=rank * 4
+    )
+    hbm_bytes = (stream_bytes + miss_bytes + out_bytes) * tensor.nnz
+    memory_s = hbm_bytes / hw.hbm_bw
+
+    return TpuModeTime(
+        mode=mode,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        hit_rates=hits,
+        hbm_bytes=hbm_bytes,
+    )
 
 
 def model_flops_for(cfg, shape_spec) -> float:

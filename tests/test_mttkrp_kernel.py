@@ -4,7 +4,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional (requirements-dev.txt): only the property sweep
+# needs it, so a fresh clone without it still runs the rest of this module.
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.mttkrp import dense_mttkrp_oracle, mttkrp_ref
 from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
@@ -85,24 +93,32 @@ def test_empty_blocks_are_zeroed():
     assert np.all(np.asarray(got)[100:200] == 0.0)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    i0=st.integers(3, 60),
-    i1=st.integers(3, 40),
-    i2=st.integers(3, 40),
-    rank=st.sampled_from([1, 3, 8, 16, 24]),
-    nnz=st.integers(1, 400),
-    tile=st.sampled_from([8, 32, 128]),
-    rpb=st.sampled_from([8, 32, 128]),
-    mode=st.integers(0, 2),
-    seed=st.integers(0, 2**16),
-)
-def test_pallas_property_sweep(i0, i1, i2, rank, nnz, tile, rpb, mode, seed):
-    t = random_sparse_tensor((i0, i1, i2), nnz=nnz, seed=seed)
-    facs = _factors(t.shape, rank, seed=seed % 97)
-    got = mttkrp_pallas(t, facs, mode, tile_nnz=tile, rows_per_block=rpb, interpret=True)
-    want = mttkrp_ref(t, facs, mode)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        i0=st.integers(3, 60),
+        i1=st.integers(3, 40),
+        i2=st.integers(3, 40),
+        rank=st.sampled_from([1, 3, 8, 16, 24]),
+        nnz=st.integers(1, 400),
+        tile=st.sampled_from([8, 32, 128]),
+        rpb=st.sampled_from([8, 32, 128]),
+        mode=st.integers(0, 2),
+        seed=st.integers(0, 2**16),
+    )
+    def test_pallas_property_sweep(i0, i1, i2, rank, nnz, tile, rpb, mode, seed):
+        t = random_sparse_tensor((i0, i1, i2), nnz=nnz, seed=seed)
+        facs = _factors(t.shape, rank, seed=seed % 97)
+        got = mttkrp_pallas(t, facs, mode, tile_nnz=tile, rows_per_block=rpb, interpret=True)
+        want = mttkrp_ref(t, facs, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
+    def test_pallas_property_sweep():
+        pass
 
 
 def test_plan_properties():
