@@ -19,10 +19,12 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+from repro.core.hierarchy import PHOTONIC_IMC
 from repro.core.memory_tech import E_SRAM, O_SRAM, TPU_V5E
 from repro.core.perf_model import energy_table, speedup_table
 from repro.data.frostt import FROSTT_TENSORS, PAPER_RANK
@@ -40,6 +42,8 @@ from repro.dse import (
 from repro.perf.report import sweep_table_md
 
 BASE_TECHS = {"E-SRAM": E_SRAM, "O-SRAM": O_SRAM}
+# The four memory stacks of DESIGN.md §9, priced through one engine.
+ALL_TECHS = (E_SRAM, O_SRAM, TPU_V5E, PHOTONIC_IMC)
 
 
 def _parse_values(pairs: list[str], axes_names: list[str]) -> dict[str, list[float]]:
@@ -112,7 +116,17 @@ def main(argv: list[str] | None = None) -> int:
         choices=["che", "trace", "auto"],
         help="cache-model path per tensor (DESIGN.md §7)",
     )
-    ap.add_argument("--no-tpu", action="store_true", help="skip the TPU-v5e roofline point")
+    ap.add_argument(
+        "--no-cross-tech",
+        action="store_true",
+        help="skip the cross-technology section (all four stacks incl. "
+        "TPU-v5e and photonic IMC)",
+    )
+    ap.add_argument(
+        "--no-tpu",
+        action="store_true",
+        help="deprecated alias for --no-cross-tech",
+    )
     ap.add_argument("--out", default="BENCH_dse.json", help="trajectory artifact path")
     args = ap.parse_args(argv)
 
@@ -143,23 +157,36 @@ def main(argv: list[str] | None = None) -> int:
         label=f"{args.base} (paper base)", tech=BASE_TECHS[args.base], rank=args.rank
     )
     points = [base_point] + spec.points()
+    # Wall-time the batched evaluation so the artifact's trajectory shows
+    # the per-point cost of the vectorized evaluator (DESIGN.md §8).
+    t0 = time.perf_counter()
     result = evaluate_sweep(
         points, tensors, hit_rate_method=args.hit_rates, cache=cache
     )
+    eval_seconds = time.perf_counter() - t0
     comparison = compare_techs(result, baseline=base_point.label)
     print(f"## Sweep: base={args.base}, axes={axes_names} ({len(points)} points)\n")
     print(sweep_table_md(comparison))
     frontier = [r["config"] for r in comparison if r["pareto"]]
     print(f"\nPareto frontier ({len(frontier)} configs): " + "; ".join(frontier) + "\n")
+    print(
+        f"evaluator wall time: {eval_seconds:.3f}s for {len(points)} points "
+        f"({eval_seconds / len(points) * 1e3:.2f} ms/point)\n"
+    )
 
-    # --- 3. TPU-v5e as a third technology (roofline engine) ----------------
-    tpu_rows = []
-    if not args.no_tpu:
-        tpu = evaluate_sweep(tech_comparison([TPU_V5E]), tensors, cache=cache)
-        tpu_rows = tpu.rows()
-        print("## TPU-v5e-class roofline (third technology)\n")
-        print(sweep_table_md(tpu_rows))
+    # --- 3. all four technologies through the one hierarchy engine ---------
+    skip_cross = args.no_cross_tech or args.no_tpu
+    tech_rows = []
+    if not skip_cross:
+        t0 = time.perf_counter()
+        cross = evaluate_sweep(tech_comparison(list(ALL_TECHS)), tensors, cache=cache)
+        cross_seconds = time.perf_counter() - t0
+        tech_rows = cross.rows(baseline="E-SRAM")
+        print("## Cross-technology (one MemoryHierarchy engine, DESIGN.md §9)\n")
+        print(sweep_table_md(tech_rows))
         print()
+    else:
+        cross_seconds = 0.0
 
     hit_stats = {"entries": len(cache), "hits": cache.hits, "misses": cache.misses}
     print(f"hit-rate memo: {hit_stats}")
@@ -174,7 +201,14 @@ def main(argv: list[str] | None = None) -> int:
         "paper_pair": {"rows": pair_rows, "exact_match": exact},
         "sweep": comparison,
         "pareto_frontier": frontier,
-        "tpu": tpu_rows,
+        "technologies": [t.name for t in ALL_TECHS] if not skip_cross else [],
+        "tech_comparison": tech_rows,
+        "evaluator_wall_s": {
+            "sweep_total": eval_seconds,
+            "sweep_points": len(points),
+            "sweep_s_per_point": eval_seconds / len(points),
+            "cross_tech_total": cross_seconds,
+        },
         "hit_rate_memo": hit_stats,
     }
     Path(args.out).write_text(json.dumps(artifact, indent=2))

@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Regenerate tests/golden/flat_model_golden.json (DESIGN.md §9).
+
+The fixture pins the flat-model results the ``MemoryHierarchy`` refactor
+must reproduce bit-exactly: paper-pair speedup/energy tables, the TPU
+roofline rows, and one 3-axis sweep.  Floats are stored as ``float.hex()``
+strings so JSON round-tripping cannot lose bits.
+
+WARNING: the fixture was generated ONCE, from the pre-refactor flat
+model.  Regenerating it runs the CURRENT code — it redefines the baseline
+and turns the equivalence tests into a tautology, so it refuses to
+overwrite an existing fixture unless you pass ``--refresh-baseline`` to
+state that an intentional model change is the new reference:
+
+    PYTHONPATH=src python scripts/gen_golden.py --refresh-baseline
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.perf_model import energy_table, speedup_table
+from repro.data.frostt import FROSTT_TENSORS
+from repro.dse import SweepSpec, evaluate_sweep
+from repro.perf.roofline import mttkrp_tpu_roofline
+
+# The 3-axis sweep of the golden suite (small tensors keep it fast).
+GOLDEN_SWEEP_AXES = {
+    "cache_lines": [1024, 4096],
+    "frequency": [5e9, 20e9],
+    "rank": [8, 16],
+}
+GOLDEN_SWEEP_TENSORS = ("NELL-2", "LBNL")
+
+
+def hexf(x: float) -> str:
+    return float(x).hex()
+
+
+def main() -> int:
+    out = ROOT / "tests" / "golden" / "flat_model_golden.json"
+    if out.exists() and "--refresh-baseline" not in sys.argv[1:]:
+        print(
+            f"{out} already exists; regenerating would re-pin the baseline "
+            "to the CURRENT model (see module docstring). Pass "
+            "--refresh-baseline if that is intentional.",
+            file=sys.stderr,
+        )
+        return 1
+    golden: dict = {}
+
+    st = speedup_table()
+    et = energy_table()
+    golden["paper_pair"] = {
+        name: {
+            "esram_mode_s": [hexf(r.t_esram.seconds) for r in modes],
+            "osram_mode_s": [hexf(r.t_osram.seconds) for r in modes],
+            "esram_energy_j": hexf(et[name].e_esram_j),
+            "osram_energy_j": hexf(et[name].e_osram_j),
+        }
+        for name, modes in st.items()
+    }
+
+    golden["tpu_roofline"] = {
+        name: [
+            {
+                "compute_s": hexf(mt.compute_s),
+                "memory_s": hexf(mt.memory_s),
+                "hbm_bytes": hexf(mt.hbm_bytes),
+            }
+            for mt in (
+                mttkrp_tpu_roofline(t, m) for m in range(t.nmodes)
+            )
+        ]
+        for name, t in FROSTT_TENSORS.items()
+    }
+
+    spec = SweepSpec(axes=GOLDEN_SWEEP_AXES)
+    tensors = {n: FROSTT_TENSORS[n] for n in GOLDEN_SWEEP_TENSORS}
+    res = evaluate_sweep(spec.points(), tensors)
+    golden["sweep"] = {
+        "axes": {a: [float(v) for v in vs] for a, vs in GOLDEN_SWEEP_AXES.items()},
+        "tensors": list(GOLDEN_SWEEP_TENSORS),
+        "cells": [
+            {
+                "label": r.label,
+                "tensor": r.tensor,
+                "mode_s": [hexf(s) for s in r.mode_seconds],
+                "energy_j": hexf(r.energy_j),
+            }
+            for r in res.results
+        ],
+    }
+
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(golden, indent=1))
+    print(f"wrote {out} ({len(golden['sweep']['cells'])} sweep cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,23 +1,14 @@
-"""spMTTKRP accelerator configuration + per-mode execution-time model.
+"""spMTTKRP accelerator configuration (paper §IV, Table I).
 
-Implements the paper's §IV accelerator (Table I) and the throughput model
-used for Fig. 7.  The per-mode execution time is the max of three
-steady-state rates (fully pipelined design, §IV-B):
+The per-mode execution-time model lives in ``repro.core.hierarchy``
+(DESIGN.md §3): the paper's accelerator is priced as the 2-level
+``fpga_hierarchy`` instance — cache subsystem over DDR4 — by the generic
+multi-level engine.  ``mode_execution_time`` here is the historical entry
+point, kept as a thin adapter; ``ModeTime``, ``split_capacity_hit_rates``
+and ``dram_traffic_per_nnz`` re-export from the hierarchy module so the
+formula cannot drift between technologies (DESIGN.md §2).
 
-  * compute      — N*|T|*R elementary ops over n_pe * n_pipelines lanes
-                   at f_electrical (paper §IV-A "total computations");
-  * cache/on-chip— (N-1) factor-row requests per nonzero served by
-                   ``n_caches`` caches; each request occupies a cache for
-                   1 cycle on a hit and ``miss_occupancy`` cycles on a miss
-                   on E-SRAM (tag + line fill through 2x32b ports, Fig 5/6
-                   dual-pipeline partially hides it).  On O-SRAM the same
-                   occupancy is divided by the effective port concurrency
-                   of Eq (1) (200 words/cycle), which is the paper's whole
-                   point: *the cache subsystem stops being the bottleneck*;
-  * DRAM         — the §IV-A traffic formula |T| + (N-1)|T|R + I_out*R
-                   with only cache MISSES touching DRAM for factor rows.
-
-Speedup(O/E) per mode then reproduces Fig. 7's 1.1x-2.9x band: cache-bound
+Speedup(O/E) per mode reproduces Fig. 7's 1.1x-2.9x band: cache-bound
 tensors (NELL-2, PATENTS) accelerate, DRAM-bound ones (NELL-1, DELICIOUS)
 do not — the paper's headline qualitative result.
 """
@@ -26,9 +17,15 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.cache_sim import CacheConfig, che_hit_rate
+from repro.core.cache_sim import CacheConfig
+from repro.core.hierarchy import (
+    ModeTime,
+    dram_traffic_per_nnz,
+    fpga_hierarchy,
+    hierarchy_mode_time,
+    split_capacity_hit_rates,
+)
 from repro.core.memory_tech import (
-    E_SRAM,
     PAPER_SYSTEM,
     MemoryTechSpec,
     SystemConstants,
@@ -79,53 +76,6 @@ class AcceleratorConfig:
 PAPER_ACCEL = AcceleratorConfig()
 
 
-@dataclasses.dataclass(frozen=True)
-class ModeTime:
-    """Per-mode steady-state rates (nonzeros per electrical cycle) + time."""
-
-    mode: int
-    rate_compute: float
-    rate_cache: float
-    rate_dram: float
-    hit_rates: tuple[float, ...]
-    dram_bytes: float
-    onchip_bytes_touched: float
-    seconds: float
-
-    @property
-    def bottleneck(self) -> str:
-        rates = {
-            "compute": self.rate_compute,
-            "onchip": self.rate_cache,
-            "dram": self.rate_dram,
-        }
-        return min(rates, key=rates.get)
-
-
-def split_capacity_hit_rates(
-    tensor: FrosttTensor, mode: int, *, capacity_bytes: int, rank: int
-) -> tuple[float, ...]:
-    """Che/LRU hit rate per input factor for a shared row-cache capacity.
-
-    The capacity (whatever memory plays the factor-row cache — the FPGA
-    cache subsystem, or TPU VMEM in the roofline engine) is split evenly
-    across the N-1 input factor matrices (§IV: 'Each cache is shared with
-    multiple input factor matrices').
-    """
-    row_bytes = rank * 4
-    total_rows = capacity_bytes // row_bytes
-    n_inputs = max(1, tensor.nmodes - 1)
-    rows_per_input = max(1, total_rows // n_inputs)
-    hits = []
-    for k in range(tensor.nmodes):
-        if k == mode:
-            continue
-        hits.append(
-            che_hit_rate(tensor.dims[k], rows_per_input, zipf_alpha=tensor.zipf_alpha)
-        )
-    return tuple(hits)
-
-
 def input_hit_rates(
     tensor: FrosttTensor, mode: int, accel: AcceleratorConfig, rank: int
 ) -> tuple[float, ...]:
@@ -144,30 +94,6 @@ def input_hit_rates(
     )
 
 
-def dram_traffic_per_nnz(
-    tensor: FrosttTensor,
-    mode: int,
-    hit_rates: tuple[float, ...],
-    *,
-    rank: int,
-    row_bytes: float,
-    value_bytes: int = 4,
-    index_bytes: int = 4,
-) -> tuple[float, float, float]:
-    """Paper §IV-A traffic per nonzero: (stream, factor-miss, output) bytes.
-
-    stream — the nonzero element itself (value + per-mode indices);
-    miss   — factor-row fills, only cache MISSES touch DRAM;
-    output — the output factor matrix, amortized over the nonzeros.
-    Shared by the FPGA model and the TPU roofline so the formula cannot
-    drift between technologies (DESIGN.md §2).
-    """
-    stream_bytes = value_bytes + tensor.nmodes * index_bytes
-    miss_bytes = sum((1.0 - h) for h in hit_rates) * row_bytes
-    out_bytes = tensor.dims[mode] * rank * value_bytes / tensor.nnz
-    return stream_bytes, miss_bytes, out_bytes
-
-
 def mode_execution_time(
     tensor: FrosttTensor,
     mode: int,
@@ -178,80 +104,13 @@ def mode_execution_time(
     system: SystemConstants = PAPER_SYSTEM,
     hit_rates: tuple[float, ...] | None = None,
 ) -> ModeTime:
-    n = tensor.nmodes
-    nnz = tensor.nnz
-    f = system.f_electrical
+    """Price one (tensor, mode, technology) cell via the memory hierarchy.
 
-    # --- compute rate (paper: N*|T|*R ops per mode) ------------------------
-    lanes = accel.n_pe * accel.pipelines_per_pe
-    rate_compute = lanes / (n * rank)
-
-    # --- cache / on-chip rate ----------------------------------------------
-    if hit_rates is None:
-        hit_rates = input_hit_rates(tensor, mode, accel, rank)
-    # Requests per nonzero: one row load per input factor.
-    # E-SRAM: each request occupies its cache ``base_request_occupancy``
-    # cycles (64 B line through banked BRAM ports) plus ``miss_occupancy``
-    # on a miss.  O-SRAM: the same occupancy divided by the Eq-(1)
-    # concurrency (200 words/electrical cycle vs 2) — the paper's point.
-    concurrency = tech.effective_ports(f) / E_SRAM.effective_ports(f)
-    avg_occ = 0.0
-    for h in hit_rates:
-        avg_occ += accel.base_request_occupancy + (1.0 - h) * accel.miss_occupancy
-    avg_occ /= max(len(hit_rates), 1)
-    requests_per_nnz = n - 1
-    rate_cache = (accel.n_pe * accel.n_caches * concurrency) / (
-        requests_per_nnz * avg_occ
-    )
-    # The O-SRAM path is still bounded by issue slots of the electrical mesh
-    # (sync interface, §III-A): it cannot exceed one request slot per
-    # pipeline per cycle.
-    rate_cache = min(rate_cache, lanes / requests_per_nnz)
-
-    # --- DRAM rate (paper traffic formula, misses only for factor rows) ----
-    stream_bytes, miss_bytes, out_bytes = dram_traffic_per_nnz(
-        tensor,
-        mode,
-        hit_rates,
-        rank=rank,
-        row_bytes=accel.cache.line_bytes,  # one R=16 fp32 row == one line
-        value_bytes=accel.value_bytes,
-        index_bytes=accel.index_bytes,
-    )
-    dram_bytes_per_nnz = stream_bytes + miss_bytes + out_bytes
-    rate_dram = system.dram_bw / (dram_bytes_per_nnz * f)
-
-    rate = min(rate_compute, rate_cache, rate_dram)
-    seconds = nnz / (rate * f)
-
-    # On-chip SWITCHED bits per nonzero (for the Eq-3 switching energy).
-    # E-SRAM reads all ``associativity`` ways in parallel (Fig 5/6 pulls m
-    # data ways at once) + tags + LRU state, and pays fill/writeback bits
-    # on misses.  O-SRAM's phased access (tag, then the single hit way)
-    # switches only the needed bits — its 40x frequency headroom hides the
-    # serialization.  Partial-sum RMW and DMA staging are equal for both.
-    line_bits = accel.cache.line_bytes * 8
-    per_request = 0.0
-    for h in hit_rates:
-        if tech.phased_access:
-            per_request += accel.tag_bits + line_bits + (1.0 - h) * line_bits
-        else:
-            per_request += (
-                accel.cache.associativity * (line_bits + accel.tag_bits)
-                + accel.lru_bits
-                + (1.0 - h) * 2 * line_bits  # fill + victim writeback
-            )
-    psum_bits = 2 * rank * 32  # read + write of the output row slice
-    stream_bits = stream_bytes * 8
-    switched_bits_per_nnz = per_request + psum_bits + stream_bits
-
-    return ModeTime(
-        mode=mode,
-        rate_compute=rate_compute,
-        rate_cache=rate_cache,
-        rate_dram=rate_dram,
-        hit_rates=hit_rates,
-        dram_bytes=dram_bytes_per_nnz * nnz,
-        onchip_bytes_touched=switched_bits_per_nnz / 8.0 * nnz,
-        seconds=seconds,
-    )
+    Builds the paper's 2-level FPGA stack for ``tech`` and hands it to the
+    generic engine; bit-identical to the historical flat model
+    (tests/test_hierarchy.py pins this against golden fixtures).
+    """
+    hier = fpga_hierarchy(tech, accel=accel, system=system)
+    mt = hierarchy_mode_time(hier, tensor, mode, rank=rank, hit_rates=hit_rates)
+    assert isinstance(mt, ModeTime)
+    return mt

@@ -17,6 +17,7 @@ from repro.core.accelerator import (
     ModeTime,
     mode_execution_time,
 )
+from repro.core.hierarchy import fpga_hierarchy, hierarchy_energy, level_power_w
 from repro.core.memory_tech import (
     E_SRAM,
     O_SRAM,
@@ -49,12 +50,16 @@ def sram_power_w(
 
     Static power charges the full provisioned capacity (54 MB, §V-A);
     switching charges the actively accessed bits per electrical cycle.
+    The formula itself lives in ``repro.core.hierarchy.level_power_w`` so
+    every stack instance shares it.
     """
-    total_bits = system.onchip_bytes * 8
-    static_w = total_bits * tech.static_pj_per_bit_cycle * 1e-12 * system.f_electrical
-    active_bits = active_bytes_per_cycle * 8
-    switching_w = active_bits * tech.switching_pj_per_bit * 1e-12 * system.f_electrical
-    return static_w, switching_w
+    return level_power_w(
+        provisioned_bytes=system.onchip_bytes,
+        static_pj_per_bit_cycle=tech.static_pj_per_bit_cycle,
+        switching_pj_per_bit=tech.switching_pj_per_bit,
+        active_bytes_per_cycle=active_bytes_per_cycle,
+        f_clock=system.f_electrical,
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,29 +129,21 @@ def total_energy(
 ) -> tuple[float, dict]:
     """Paper Eq (2): E = P_compute*t + E_DRAM + P_SRAM*n_SRAM*t (all modes).
 
-    ``mode_times`` lets callers (repro.dse.evaluator) inject per-mode
-    execution times computed with memoized hit rates; when omitted they are
-    recomputed here, which yields bit-identical results.
+    Delegates to the hierarchy energy engine over the paper's 2-level FPGA
+    stack (DESIGN.md §9).  ``mode_times`` lets callers
+    (repro.dse.evaluator) inject per-mode execution times computed with
+    memoized hit rates; when omitted they are recomputed here, which
+    yields bit-identical results.
     """
+    hier = fpga_hierarchy(tech, accel=accel, system=system)
     if mode_times is None:
         mode_times = tuple(
             mode_execution_time(tensor, m, tech, rank=rank, accel=accel, system=system)
             for m in range(tensor.nmodes)
         )
-    e_compute = 0.0
-    e_dram = 0.0
-    e_sram = 0.0
-    for mt in mode_times:
-        t = mt.seconds
-        e_compute += system.compute_power_w * t
-        e_dram += mt.dram_bytes * system.dram_pj_per_byte * 1e-12
-        active_bytes_per_cycle = mt.onchip_bytes_touched / (t * system.f_electrical)
-        static_w, switching_w = sram_power_w(
-            tech, active_bytes_per_cycle=active_bytes_per_cycle, system=system
-        )
-        e_sram += (static_w + switching_w) * t
-    total = e_compute + e_dram + e_sram
-    return total, {"compute": e_compute, "dram": e_dram, "sram": e_sram}
+    total, breakdown = hierarchy_energy(hier, tensor, mode_times)
+    assert total is not None
+    return total, breakdown
 
 
 def energy_table(

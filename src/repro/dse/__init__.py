@@ -6,18 +6,21 @@ cache geometry, PE count, DRAM channels, rank.  This package makes those
 axes sweepable (DESIGN.md §8):
 
   * ``repro.dse.sweep``     — ``SweepSpec``/``SweepPoint``: grids of
-    parameter overrides over the base ``MemoryTechSpec`` /
-    ``AcceleratorConfig`` / ``SystemConstants``; the paper's E-SRAM vs
-    O-SRAM comparison is the trivial 2-point sweep (``paper_pair``);
-  * ``repro.dse.evaluator`` — prices every (point, tensor, mode) cell via
-    ``repro.core`` with hit rates memoized per cache geometry (they never
-    depend on the memory technology), choosing exact LRU trace simulation
-    or the Che approximation per tensor;
+    parameter overrides over the base ``MemoryTechSpec``/``TpuSpec`` /
+    ``AcceleratorConfig`` / ``SystemConstants``, plus hierarchy-level
+    axes (``level_axis_points``, ``add_level_point``,
+    ``drop_level_point`` — DESIGN.md §9); the paper's E-SRAM vs O-SRAM
+    comparison is the trivial 2-point sweep (``paper_pair``);
+  * ``repro.dse.evaluator`` — resolves every point to its
+    ``repro.core.hierarchy.MemoryHierarchy`` and prices all cells through
+    the one batched engine, with hit rates memoized per ``CacheGeometry``
+    (they never depend on the memory technology), choosing exact LRU
+    trace simulation or the Che approximation per tensor;
   * ``repro.dse.pareto``    — the time-vs-energy comparison layer:
     Pareto frontier, ranking, and baseline-relative speedup/savings.
 
-TPU-v5e participates as a third technology through the roofline engine
-(``repro.perf.roofline.mttkrp_tpu_roofline``); sweep tables render through
+The TPU-v5e and photonic-IMC stacks participate as plain hierarchy
+instances — no per-technology dispatch; sweep tables render through
 ``repro.perf.report``; ``benchmarks/dse_sweep.py`` is the CLI driver.
 """
 
@@ -40,6 +43,9 @@ from repro.dse.sweep import (
     SWEEP_AXES,
     SweepPoint,
     SweepSpec,
+    add_level_point,
+    drop_level_point,
+    level_axis_points,
     paper_pair,
     tech_comparison,
 )
@@ -49,6 +55,9 @@ __all__ = [
     "SWEEP_AXES",
     "SweepPoint",
     "SweepSpec",
+    "add_level_point",
+    "drop_level_point",
+    "level_axis_points",
     "paper_pair",
     "tech_comparison",
     "HitRateCache",

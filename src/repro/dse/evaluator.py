@@ -1,14 +1,19 @@
 """Vectorized sweep evaluation with memoized cache-hit-rate results.
 
-Pricing one ``SweepPoint`` for one (tensor, mode) runs the paper's model
-(``repro.core.accelerator.mode_execution_time`` + ``repro.core.perf_model``
-energy) — cheap arithmetic EXCEPT for the cache hit rates, which need
+Every ``SweepPoint`` resolves to a ``repro.core.hierarchy.MemoryHierarchy``
+and is priced by the same multi-level engine — the FPGA technologies, the
+TPU-v5e roofline, and the photonic-IMC stack take one code path
+(DESIGN.md §9); there is no per-technology dispatch here.
+
+Pricing is cheap arithmetic EXCEPT for the cache hit rates, which need
 either a Che fixed-point solve or an exact LRU trace simulation
-(``repro.core.cache_sim``, DESIGN.md §7).  Hit rates depend only on the
-cache geometry, the tensor and the rank — never on the memory technology —
-so a ``HitRateCache`` keyed by that tuple turns an A×B×…-point sweep into
-one hit-rate solve per (geometry, tensor, mode) plus pure arithmetic per
-point (DESIGN.md §8).
+(``repro.core.cache_sim``, DESIGN.md §7).  Hit rates depend only on a
+level's ``CacheGeometry``, the tensor, the mode and the rank — never on
+the memory technology — so a ``HitRateCache`` keyed by
+``CacheGeometry.key()`` (the single declared geometry tuple) turns an
+A×B×…-point sweep into one hit-rate solve per (geometry, tensor, mode)
+plus batched NumPy arithmetic over all points sharing a hierarchy shape
+(DESIGN.md §8).
 
 Hit-rate methods, chosen per tensor:
   * ``"che"``   — Che's LRU approximation on the full-size Table II
@@ -17,6 +22,9 @@ Hit-rate methods, chosen per tensor:
     tensor's mode-ordered index trace (small / synthetic tensors);
   * ``"auto"``  — ``"trace"`` when the tensor's nonzero count is within
     ``trace_nnz_limit`` (simulation cost is O(nnz·modes)), else ``"che"``.
+Fully-associative levels (``associativity=None``, e.g. TPU VMEM) are
+Che-only: simulating millions of ways per access is pointless when Che is
+exact in the fully-associative IRM limit.
 """
 
 from __future__ import annotations
@@ -25,13 +33,20 @@ import dataclasses
 import functools
 from typing import Mapping, Sequence
 
-from repro.core.accelerator import AcceleratorConfig, ModeTime, input_hit_rates, mode_execution_time
+from repro.core.accelerator import AcceleratorConfig
 from repro.core.cache_sim import CacheConfig, simulate_trace
-from repro.core.perf_model import total_energy
+from repro.core.hierarchy import (
+    CacheGeometry,
+    ModeTime,
+    TpuModeTime,
+    hierarchy_energy_batch,
+    hierarchy_mode_times_batch,
+    scratchpad_hit_rates,
+    split_capacity_hit_rates,
+)
 from repro.core.sparse_tensor import SparseTensor
 from repro.data.frostt import FROSTT_TENSORS, FrosttTensor
 from repro.dse.sweep import SweepPoint
-from repro.perf.roofline import TpuModeTime, mttkrp_tpu_roofline
 
 __all__ = [
     "HitRateCache",
@@ -41,33 +56,47 @@ __all__ = [
     "evaluate_sweep",
 ]
 
-# Above this nonzero count the exact LRU simulation (python-loop over the
-# trace) is slower than the Che solve by orders of magnitude; "auto" falls
-# back to the approximation (DESIGN.md §7).
+# Above this nonzero count the exact LRU simulation is slower than the Che
+# solve by orders of magnitude; "auto" falls back to the approximation
+# (DESIGN.md §7).
 TRACE_NNZ_LIMIT = 200_000
 
 
-def exact_hit_rates(
+def _geometry_of(accel: AcceleratorConfig) -> CacheGeometry:
+    """The combined cache-subsystem geometry of a Table-I accelerator."""
+    return CacheGeometry(
+        capacity_bytes=accel.n_caches * accel.cache.capacity_bytes,
+        line_bytes=accel.cache.line_bytes,
+        associativity=accel.cache.associativity,
+    )
+
+
+def exact_hit_rates_for_geometry(
     tensor: SparseTensor,
     mode: int,
-    accel: AcceleratorConfig,
+    geometry: CacheGeometry,
     rank: int,
 ) -> tuple[float, ...]:
     """Exact LRU hit rate per input factor over the mode-ordered trace.
 
-    Mirrors the capacity split of ``input_hit_rates``: the combined cache
-    capacity is divided evenly across the N-1 input factor matrices, and
-    each input's row-index column of the (output-mode-sorted) nonzero
-    stream is simulated against its share.
+    Mirrors the capacity split of ``split_capacity_hit_rates``: the
+    level's capacity is divided evenly across the N-1 input factor
+    matrices, and each input's row-index column of the (output-mode-
+    sorted) nonzero stream is simulated against its share.
     """
     row_bytes = rank * 4
-    line_bytes = accel.cache.line_bytes
+    line_bytes = geometry.line_bytes if geometry.line_bytes is not None else row_bytes
     lines_per_row = max(1, -(-row_bytes // line_bytes))
-    total_rows = accel.n_caches * accel.cache.capacity_bytes // row_bytes
+    total_rows = geometry.capacity_bytes // row_bytes
     n_inputs = max(1, tensor.nmodes - 1)
     rows_per_input = max(1, total_rows // n_inputs)
 
-    assoc = min(accel.cache.associativity, rows_per_input * lines_per_row)
+    # associativity=None means fully associative: one set holding the
+    # whole share.  (HitRateCache routes such levels to Che for speed, but
+    # the simulation stays well-defined for direct callers and tests.)
+    max_ways = rows_per_input * lines_per_row
+    assoc_limit = geometry.associativity if geometry.associativity is not None else max_ways
+    assoc = min(assoc_limit, max_ways)
     num_lines = rows_per_input * lines_per_row
     num_lines = max(assoc, -(-num_lines // assoc) * assoc)  # multiple of assoc
     cfg = CacheConfig(num_lines=num_lines, line_bytes=line_bytes, associativity=assoc)
@@ -82,8 +111,23 @@ def exact_hit_rates(
     return tuple(hits)
 
 
+def exact_hit_rates(
+    tensor: SparseTensor,
+    mode: int,
+    accel: AcceleratorConfig,
+    rank: int,
+) -> tuple[float, ...]:
+    """Historical entry point: exact hit rates for a Table-I accelerator."""
+    return exact_hit_rates_for_geometry(tensor, mode, _geometry_of(accel), rank)
+
+
 class HitRateCache:
-    """Memo for per-(cache geometry, tensor, mode, rank, method) hit rates.
+    """Memo for per-(CacheGeometry, tensor, mode, rank, method) hit rates.
+
+    The key is derived from ``CacheGeometry.key()`` — the single declared
+    tuple of geometry fields; ``repro.core.hierarchy`` asserts at import
+    time that every geometry field is in it, so a new hierarchy-level
+    field cannot silently alias memo entries (DESIGN.md §8 step 3).
 
     ``hits``/``misses`` count lookups so tests (and the benchmark's
     trajectory artifact) can verify the memoization is actually working.
@@ -101,13 +145,17 @@ class HitRateCache:
         self,
         tensor: FrosttTensor,
         mode: int,
-        accel: AcceleratorConfig,
+        geometry: CacheGeometry,
         rank: int,
         *,
         method: str = "che",
         trace: SparseTensor | None = None,
         trace_nnz_limit: int = TRACE_NNZ_LIMIT,
     ) -> tuple[float, ...]:
+        if method not in ("che", "trace", "auto"):
+            raise ValueError(f"unknown hit-rate method {method!r}")
+        if geometry.associativity is None:
+            method = "che"  # fully-associative Che-only level (module doc)
         if method == "auto":
             executable = trace if trace is not None else _executable_for(tensor)
             if executable is not None and executable.nnz <= trace_nnz_limit:
@@ -122,24 +170,16 @@ class HitRateCache:
             if (method == "trace" and trace is not None)
             else None
         )
-        key = (
-            tensor.name,
-            mode,
-            rank,
-            method,
-            trace_key,
-            accel.n_caches,
-            accel.cache.num_lines,
-            accel.cache.line_bytes,
-            accel.cache.associativity,
-        )
+        key = (tensor.name, mode, rank, method, trace_key) + geometry.key()
         if key in self._store:
             self.hits += 1
             return self._store[key]
         self.misses += 1
         if method == "che":
-            rates = input_hit_rates(tensor, mode, accel, rank)
-        elif method == "trace":
+            rates = split_capacity_hit_rates(
+                tensor, mode, capacity_bytes=geometry.capacity_bytes, rank=rank
+            )
+        else:
             if trace is None:
                 trace = _executable_for(tensor)
             if trace is None:
@@ -147,9 +187,7 @@ class HitRateCache:
                     f"no executable trace available for {tensor.name!r}; "
                     "pass trace_tensors= or use method='che'"
                 )
-            rates = exact_hit_rates(trace, mode, accel, rank)
-        else:
-            raise ValueError(f"unknown hit-rate method {method!r}")
+            rates = exact_hit_rates_for_geometry(trace, mode, geometry, rank)
         self._store[key] = rates
         return rates
 
@@ -175,7 +213,7 @@ class PointTensorResult:
     label: str
     tensor: str
     mode_times: tuple[ModeTime | TpuModeTime, ...]
-    energy_j: float | None  # None for TPU points (no Eq-2 constants)
+    energy_j: float | None  # None when the stack has no Eq-2 constants
     energy_breakdown: dict | None
 
     @property
@@ -246,6 +284,37 @@ class SweepResult:
         return rows
 
 
+def _level_hits_for_point(
+    hier,
+    tensor: FrosttTensor,
+    mode: int,
+    rank: int,
+    cache: HitRateCache,
+    *,
+    method: str,
+    trace: SparseTensor | None,
+    trace_nnz_limit: int,
+) -> tuple[tuple[float, ...], ...]:
+    """Per caching level, the memoized per-input hit rates."""
+    out = []
+    for lvl, geom in zip(hier.caching_levels(), hier.hit_geometries()):
+        if lvl.hit_model == "scratchpad":
+            out.append(scratchpad_hit_rates(tensor))
+        else:
+            out.append(
+                cache.get(
+                    tensor,
+                    mode,
+                    geom,
+                    rank,
+                    method=method,
+                    trace=trace,
+                    trace_nnz_limit=trace_nnz_limit,
+                )
+            )
+    return tuple(out)
+
+
 def evaluate_sweep(
     points: Sequence[SweepPoint],
     tensors: Mapping[str, FrosttTensor] | None = None,
@@ -257,71 +326,57 @@ def evaluate_sweep(
 ) -> SweepResult:
     """Price every (point, tensor, mode) cell of a sweep.
 
+    Points are resolved to hierarchies up front, grouped by structural
+    signature (``MemoryHierarchy.batch_signature()``: timing family,
+    energy model, per-level sub-model presence), and each group's
+    post-hit-rate arithmetic runs as one batched NumPy evaluation across
+    all its points (``repro.core.hierarchy.hierarchy_mode_times_batch``).
     The hit-rate memo is shared across all points, so techs/frequencies/
     wavelength counts that share a cache geometry reuse the same solve.
-    FPGA points get the full Eq-2 energy model; TPU points (``is_tpu``)
-    are priced by the roofline engine and carry no energy.
     """
     tensors = tensors or FROSTT_TENSORS
     trace_tensors = trace_tensors or {}
     # NB: an empty HitRateCache is falsy (__len__), so test identity.
     cache = cache if cache is not None else HitRateCache()
-    results: list[PointTensorResult] = []
-    for point in points:
-        for name, tensor in tensors.items():
-            if point.is_tpu:
-                mts: tuple = tuple(
-                    mttkrp_tpu_roofline(tensor, m, rank=point.rank, hw=point.tech)
-                    for m in range(tensor.nmodes)
-                )
-                results.append(
-                    PointTensorResult(
-                        label=point.label,
-                        tensor=name,
-                        mode_times=mts,
-                        energy_j=None,
-                        energy_breakdown=None,
-                    )
-                )
-                continue
-            mode_times = []
+    points = list(points)
+    hiers = [p.hierarchy() for p in points]
+
+    groups: dict[tuple, list[int]] = {}
+    for i, h in enumerate(hiers):
+        groups.setdefault(h.batch_signature(), []).append(i)
+
+    cells: dict[tuple[int, str], PointTensorResult] = {}
+    for name, tensor in tensors.items():
+        for idxs in groups.values():
+            ghiers = [hiers[i] for i in idxs]
+            granks = [points[i].rank for i in idxs]
+            mode_times: list[list] = [[] for _ in idxs]
             for m in range(tensor.nmodes):
-                hr = cache.get(
-                    tensor,
-                    m,
-                    point.accel,
-                    point.rank,
-                    method=hit_rate_method,
-                    trace=trace_tensors.get(name),
-                    trace_nnz_limit=trace_nnz_limit,
-                )
-                mode_times.append(
-                    mode_execution_time(
+                all_hits = [
+                    _level_hits_for_point(
+                        ghiers[j],
                         tensor,
                         m,
-                        point.tech,
-                        rank=point.rank,
-                        accel=point.accel,
-                        system=point.system,
-                        hit_rates=hr,
+                        granks[j],
+                        cache,
+                        method=hit_rate_method,
+                        trace=trace_tensors.get(name),
+                        trace_nnz_limit=trace_nnz_limit,
                     )
-                )
-            mts = tuple(mode_times)
-            energy, breakdown = total_energy(
-                tensor,
-                point.tech,
-                rank=point.rank,
-                accel=point.accel,
-                system=point.system,
-                mode_times=mts,
-            )
-            results.append(
-                PointTensorResult(
-                    label=point.label,
+                    for j in range(len(idxs))
+                ]
+                mts = hierarchy_mode_times_batch(ghiers, tensor, m, granks, all_hits)
+                for j, mt in enumerate(mts):
+                    mode_times[j].append(mt)
+            energies = hierarchy_energy_batch(ghiers, tensor, mode_times)
+            for j, i in enumerate(idxs):
+                energy, breakdown = energies[j]
+                cells[(i, name)] = PointTensorResult(
+                    label=points[i].label,
                     tensor=name,
-                    mode_times=mts,
+                    mode_times=tuple(mode_times[j]),
                     energy_j=energy,
                     energy_breakdown=breakdown,
                 )
-            )
+    results = [cells[(i, name)] for i in range(len(points)) for name in tensors]
     return SweepResult(results=results, cache=cache)

@@ -1,7 +1,7 @@
 """Sweepable design-space axes over the paper's configuration dataclasses.
 
 A ``SweepSpec`` is a grid (cartesian product) of parameter overrides
-applied on top of a base configuration (``MemoryTechSpec`` +
+applied on top of a base configuration (``MemoryTechSpec``/``TpuSpec`` +
 ``AcceleratorConfig``/``CacheConfig`` + ``SystemConstants`` + rank).  Each
 grid cell materializes as a frozen ``SweepPoint`` — a fully-resolved
 configuration the evaluator can price (DESIGN.md §8).
@@ -10,6 +10,11 @@ Axes are named in ``SWEEP_AXES``; each maps to a (layer, field) pair and
 is applied with ``dataclasses.replace`` so the base specs stay immutable.
 The paper's own E-SRAM/O-SRAM comparison is the trivial two-point sweep
 returned by ``paper_pair``.
+
+Hierarchy levels are sweepable too (DESIGN.md §9): ``level_axis_points``
+varies one field of one ``MemoryLevel`` (cache depth ×, HBM bandwidth ×),
+and ``add_level_point``/``drop_level_point`` produce structural variants
+(insert or remove a level) as explicit sweep points.
 """
 
 from __future__ import annotations
@@ -20,6 +25,12 @@ from typing import Any, Mapping, Sequence
 
 from repro.core.accelerator import PAPER_ACCEL, AcceleratorConfig
 from repro.core.cache_sim import CacheConfig
+from repro.core.hierarchy import (
+    MemoryHierarchy,
+    MemoryLevel,
+    PhotonicImcSpec,
+    resolve_hierarchy,
+)
 from repro.core.memory_tech import (
     E_SRAM,
     O_SRAM,
@@ -37,12 +48,15 @@ __all__ = [
     "SweepSpec",
     "paper_pair",
     "tech_comparison",
+    "level_axis_points",
+    "add_level_point",
+    "drop_level_point",
 ]
 
-
 # axis name -> (layer, dataclass field).  Layers: "tech" (MemoryTechSpec),
-# "cache" (AcceleratorConfig.cache), "accel" (AcceleratorConfig),
-# "system" (SystemConstants), "run" (evaluation parameters, i.e. rank).
+# "tpu" (TpuSpec), "cache" (AcceleratorConfig.cache), "accel"
+# (AcceleratorConfig), "system" (SystemConstants), "run" (evaluation
+# parameters, i.e. rank).
 SWEEP_AXES: dict[str, tuple[str, str]] = {
     "frequency": ("tech", "frequency_hz"),
     "wavelengths": ("tech", "wavelengths"),
@@ -57,6 +71,10 @@ SWEEP_AXES: dict[str, tuple[str, str]] = {
     "dram_channels": ("system", "dram_channels"),
     "f_electrical": ("system", "f_electrical"),
     "rank": ("run", "rank"),
+    # TPU-v5e-class memory-system axes (base_tech must be a TpuSpec).
+    "hbm_bw": ("tpu", "hbm_bw"),
+    "vmem_bytes": ("tpu", "vmem_bytes"),
+    "peak_flops": ("tpu", "peak_bf16_flops"),
 }
 
 # Default value grids used by benchmarks/dse_sweep.py when the caller
@@ -76,6 +94,9 @@ DEFAULT_AXIS_VALUES: dict[str, tuple[Any, ...]] = {
     "dram_channels": (2, 4, 8),
     "f_electrical": (250e6, 500e6, 1e9),
     "rank": (8, 16, 32),
+    "hbm_bw": (409.5e9, 819e9, 1638e9),
+    "vmem_bytes": (64 * 2**20, 128 * 2**20, 256 * 2**20),
+    "peak_flops": (98.5e12, 197e12, 394e12),
 }
 
 
@@ -89,21 +110,22 @@ def _fmt_value(v: Any) -> str:
 class SweepPoint:
     """One fully-resolved configuration of the design space.
 
-    ``tech`` is a ``MemoryTechSpec`` (FPGA memory technologies) or a
-    ``TpuSpec`` — the evaluator dispatches on the type so a TPU-v5e-class
-    chip participates as a third technology via the roofline engine.
+    ``tech`` is anything ``repro.core.hierarchy.resolve_hierarchy``
+    accepts: a ``MemoryTechSpec`` (FPGA memory technologies), a
+    ``TpuSpec``, a ``PhotonicImcSpec``, or an explicit
+    ``MemoryHierarchy``.  The evaluator prices every point through the
+    same multi-level engine — there is no per-technology dispatch.
     """
 
     label: str
-    tech: MemoryTechSpec | TpuSpec
+    tech: MemoryTechSpec | TpuSpec | PhotonicImcSpec | MemoryHierarchy
     accel: AcceleratorConfig = PAPER_ACCEL
     system: SystemConstants = PAPER_SYSTEM
     rank: int = PAPER_RANK
     overrides: tuple[tuple[str, Any], ...] = ()
 
-    @property
-    def is_tpu(self) -> bool:
-        return isinstance(self.tech, TpuSpec)
+    def hierarchy(self) -> MemoryHierarchy:
+        return resolve_hierarchy(self.tech, accel=self.accel, system=self.system)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +138,7 @@ class SweepSpec:
     """
 
     axes: Mapping[str, Sequence[Any]]
-    base_tech: MemoryTechSpec = O_SRAM
+    base_tech: MemoryTechSpec | TpuSpec = O_SRAM
     base_accel: AcceleratorConfig = PAPER_ACCEL
     base_system: SystemConstants = PAPER_SYSTEM
     rank: int = PAPER_RANK
@@ -127,6 +149,22 @@ class SweepSpec:
             raise ValueError(
                 f"unknown sweep axes {unknown}; known: {sorted(SWEEP_AXES)}"
             )
+        for axis in self.axes:
+            layer, _ = SWEEP_AXES[axis]
+            # Accel/cache/system layers only exist in the FPGA stack; a
+            # TpuSpec base would silently ignore them (tpu_hierarchy reads
+            # neither), so reject anything but "run" for non-FPGA bases.
+            if layer != "run" and not isinstance(self.base_tech, MemoryTechSpec):
+                if layer != "tpu":
+                    raise ValueError(
+                        f"axis {axis!r} ({layer} layer) does not affect a "
+                        f"{type(self.base_tech).__name__} base"
+                    )
+            if layer == "tpu" and not isinstance(self.base_tech, TpuSpec):
+                raise ValueError(
+                    f"axis {axis!r} needs a TpuSpec base, got "
+                    f"{type(self.base_tech).__name__}"
+                )
 
     def num_points(self) -> int:
         n = 1
@@ -157,7 +195,7 @@ class SweepSpec:
 
     def _apply(
         self, overrides: tuple[tuple[str, Any], ...]
-    ) -> tuple[MemoryTechSpec, AcceleratorConfig, SystemConstants, int]:
+    ) -> tuple[MemoryTechSpec | TpuSpec, AcceleratorConfig, SystemConstants, int]:
         tech_kw: dict[str, Any] = {}
         cache_kw: dict[str, Any] = {}
         accel_kw: dict[str, Any] = {}
@@ -165,7 +203,7 @@ class SweepSpec:
         rank = self.rank
         for axis, value in overrides:
             layer, field = SWEEP_AXES[axis]
-            if layer == "tech":
+            if layer in ("tech", "tpu"):
                 tech_kw[field] = value
             elif layer == "cache":
                 cache_kw[field] = value
@@ -203,14 +241,88 @@ def paper_pair(
 
 
 def tech_comparison(
-    techs: Sequence[MemoryTechSpec | TpuSpec],
+    techs: Sequence[MemoryTechSpec | TpuSpec | PhotonicImcSpec | MemoryHierarchy],
     *,
     accel: AcceleratorConfig = PAPER_ACCEL,
     system: SystemConstants = PAPER_SYSTEM,
     rank: int = PAPER_RANK,
 ) -> list[SweepPoint]:
-    """A list-sweep over arbitrary technology specs (incl. ``TpuSpec``)."""
+    """A list-sweep over arbitrary technology specs (any hierarchy kind)."""
     return [
         SweepPoint(label=t.name, tech=t, accel=accel, system=system, rank=rank)
         for t in techs
     ]
+
+
+# --------------------------------------------------------------------------
+# Hierarchy-level axes (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+
+def level_axis_points(
+    base: MemoryHierarchy,
+    *,
+    level: str,
+    field: str,
+    values: Sequence[Any],
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    rank: int = PAPER_RANK,
+) -> list[SweepPoint]:
+    """Sweep one field of one hierarchy level (e.g. HBM bandwidth x2,
+    VMEM capacity x4) as explicit sweep points over a base stack."""
+    out = []
+    for v in values:
+        hier = base.replace_level(level, **{field: v})
+        out.append(
+            SweepPoint(
+                label=f"{base.name}[{level}.{field}={_fmt_value(v)}]",
+                tech=hier,
+                accel=accel,
+                system=system,
+                rank=rank,
+                overrides=((f"{level}.{field}", v),),
+            )
+        )
+    return out
+
+
+def add_level_point(
+    base: MemoryHierarchy,
+    level: MemoryLevel,
+    index: int,
+    *,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    rank: int = PAPER_RANK,
+) -> SweepPoint:
+    """A sweep point with an extra level inserted at ``index``."""
+    hier = base.with_level(level, index)
+    return SweepPoint(
+        label=f"{base.name}[+{level.name}]",
+        tech=hier,
+        accel=accel,
+        system=system,
+        rank=rank,
+        overrides=(("add_level", level.name),),
+    )
+
+
+def drop_level_point(
+    base: MemoryHierarchy,
+    level_name: str,
+    *,
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    system: SystemConstants = PAPER_SYSTEM,
+    rank: int = PAPER_RANK,
+) -> SweepPoint:
+    """A sweep point with one level removed from the stack."""
+    hier = base.without_level(level_name)
+    return SweepPoint(
+        label=f"{base.name}[-{level_name}]",
+        tech=hier,
+        accel=accel,
+        system=system,
+        rank=rank,
+        overrides=(("drop_level", level_name),),
+    )

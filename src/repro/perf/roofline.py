@@ -20,7 +20,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.accelerator import dram_traffic_per_nnz, split_capacity_hit_rates
+from repro.core.hierarchy import (
+    TpuModeTime,
+    hierarchy_mode_time,
+    tpu_hierarchy,
+)
 from repro.core.memory_tech import TPU_V5E, TpuSpec
 from repro.data.frostt import FrosttTensor
 from repro.perf.hlo_stats import CollectiveStats
@@ -100,30 +104,6 @@ class RooflineCell:
         }
 
 
-@dataclasses.dataclass(frozen=True)
-class TpuModeTime:
-    """Roofline time for one spMTTKRP mode on a TPU-class memory system.
-
-    Mirrors ``repro.core.accelerator.ModeTime`` closely enough for the DSE
-    comparison layer: ``seconds`` + a ``bottleneck`` label + the HBM
-    traffic.  Collectives are zero for the single-chip roofline.
-    """
-
-    mode: int
-    compute_s: float
-    memory_s: float
-    hit_rates: tuple[float, ...]
-    hbm_bytes: float
-
-    @property
-    def seconds(self) -> float:
-        return max(self.compute_s, self.memory_s)
-
-    @property
-    def bottleneck(self) -> str:
-        return "compute" if self.compute_s >= self.memory_s else "memory"
-
-
 def mttkrp_tpu_roofline(
     tensor: FrosttTensor,
     mode: int,
@@ -133,38 +113,16 @@ def mttkrp_tpu_roofline(
 ) -> TpuModeTime:
     """Price one spMTTKRP mode on a TPU chip with the paper's traffic model.
 
-    The same two-resource treatment the paper applies to the FPGA is
-    applied to the TPU memory system (DESIGN.md §2):
-
-      * compute term — the paper's N*|T|*R elementary ops against the
-        chip's peak FLOP/s;
-      * memory term  — the §IV-A DRAM-traffic formula against HBM
-        bandwidth, with VMEM playing the role of the factor-row cache:
-        its capacity is split across the N-1 input factors and the Che/LRU
-        approximation prices the reuse, exactly as for the on-chip caches
-        (DESIGN.md §7).
+    The TPU memory system is the ``repro.core.hierarchy.tpu_hierarchy``
+    instance of the same 2-level stack the paper's FPGA uses (DESIGN.md
+    §2, §9): VMEM plays the factor-row cache (capacity split across the
+    N-1 input factors, Che/LRU reuse — DESIGN.md §7), HBM plays the
+    backing store, and peak FLOP/s plays the PE mesh.  Priced by the
+    generic seconds-domain roofline engine.
     """
-    n = tensor.nmodes
-    flops = float(n) * tensor.nnz * rank
-    compute_s = flops / hw.peak_bf16_flops
-
-    # Same helpers as the FPGA model, with VMEM as the shared row cache.
-    hits = split_capacity_hit_rates(
-        tensor, mode, capacity_bytes=hw.vmem_bytes, rank=rank
-    )
-    stream_bytes, miss_bytes, out_bytes = dram_traffic_per_nnz(
-        tensor, mode, hits, rank=rank, row_bytes=rank * 4
-    )
-    hbm_bytes = (stream_bytes + miss_bytes + out_bytes) * tensor.nnz
-    memory_s = hbm_bytes / hw.hbm_bw
-
-    return TpuModeTime(
-        mode=mode,
-        compute_s=compute_s,
-        memory_s=memory_s,
-        hit_rates=hits,
-        hbm_bytes=hbm_bytes,
-    )
+    mt = hierarchy_mode_time(tpu_hierarchy(hw), tensor, mode, rank=rank)
+    assert isinstance(mt, TpuModeTime)
+    return mt
 
 
 def model_flops_for(cfg, shape_spec) -> float:
