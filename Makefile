@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check
+.PHONY: test bench-smoke docs-check check experiments
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,6 +12,12 @@ bench-smoke:
 	$(PY) -m benchmarks.run --skip-slow
 	$(PY) benchmarks/dse_sweep.py --axes frequency,wavelengths \
 		--tensors NELL-2,LBNL --out /tmp/BENCH_dse_smoke.json
+
+# End-to-end experiment engine: measured CP-ALS runs on scaled FROSTT
+# tensors through ref/pallas/sharded, priced on all four memory stacks,
+# reconciled with the analytic model -> BENCH_experiments.json.
+experiments:
+	$(PY) scripts/run_experiments.py --out BENCH_experiments.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

@@ -5,21 +5,37 @@ rows, 4-way set-associative, 4096 lines x 64 B, LRU replacement, with the
 dual PE/MEM pipeline abstracted to hit/miss accounting (timing effects of
 misses are applied by the accelerator model, not here).
 
-Two entry points:
+Three entry points:
   * ``simulate_trace``  — exact simulation over an index trace (executable
     small/scaled tensors);
+  * ``simulate_traces`` — the same simulation over several independent
+    cache units (per-PE caches / per-shard traces), aggregated — the
+    trace-capture hook the experiment engine (repro.experiments) feeds
+    with EXECUTED nonzero orders (DESIGN.md §7);
   * ``che_hit_rate``    — Che's approximation for LRU under an IRM with a
     Zipf popularity law (used for the full-size FROSTT tensors whose raw
     data is unavailable offline; DESIGN.md §7).
+
+``CacheStats`` additionally tracks compulsory (first-touch) misses so a
+finite measured trace can be reconciled with Che's steady-state
+prediction: ``warm_hit_rate`` excludes the cold start, which is what the
+measured-vs-modeled residual report compares against (DESIGN.md §7).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
-__all__ = ["CacheConfig", "CacheStats", "simulate_trace", "che_hit_rate"]
+__all__ = [
+    "CacheConfig",
+    "CacheStats",
+    "simulate_trace",
+    "simulate_traces",
+    "che_hit_rate",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +59,7 @@ class CacheConfig:
 class CacheStats:
     accesses: int
     hits: int
+    cold_misses: int = 0  # compulsory (first-touch) misses within the trace
 
     @property
     def misses(self) -> int:
@@ -51,6 +68,23 @@ class CacheStats:
     @property
     def hit_rate(self) -> float:
         return self.hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def warm_hit_rate(self) -> float:
+        """Hit rate with the cold start excluded: hits over the accesses
+        that COULD have hit (everything but first touches).  This is the
+        steady-state quantity comparable to ``che_hit_rate`` (which models
+        an infinite trace and so never sees compulsory misses)."""
+        warm = self.accesses - self.cold_misses
+        return self.hits / warm if warm > 0 else 1.0
+
+    def merge(self, other: "CacheStats") -> "CacheStats":
+        """Aggregate counts across independent cache units (per-PE / shard)."""
+        return CacheStats(
+            accesses=self.accesses + other.accesses,
+            hits=self.hits + other.hits,
+            cold_misses=self.cold_misses + other.cold_misses,
+        )
 
 
 def simulate_trace(
@@ -84,6 +118,7 @@ def simulate_trace(
     accesses = 0
     hits = 0
     t = 0
+    seen: set[int] = set()
     for row in trace:
         base = int(row) * lines_per_row
         for off in range(lines_per_row):
@@ -91,6 +126,8 @@ def simulate_trace(
             s = line % n_sets
             accesses += 1
             t += 1
+            if line not in seen:
+                seen.add(line)
             way = np.nonzero(tags[s] == line)[0]
             if way.size:
                 hits += 1
@@ -99,7 +136,7 @@ def simulate_trace(
                 victim = int(np.argmin(stamp[s]))
                 tags[s, victim] = line
                 stamp[s, victim] = t
-    return CacheStats(accesses=accesses, hits=hits)
+    return CacheStats(accesses=accesses, hits=hits, cold_misses=len(seen))
 
 
 def _simulate_single_line_rows(rows: np.ndarray, n_sets: int, assoc: int) -> CacheStats:
@@ -118,30 +155,72 @@ def _simulate_single_line_rows(rows: np.ndarray, n_sets: int, assoc: int) -> Cac
     grouped = rows[order]
     boundaries = np.flatnonzero(np.diff(sets[order])) + 1
     hits = 0
+    cold = 0
     for seg in np.split(grouped, boundaries):
         lru: dict[int, None] = {}
+        seen: set[int] = set()
         for line in seg.tolist():
+            if line not in seen:
+                seen.add(line)
+                cold += 1
             if line in lru:
                 hits += 1
                 del lru[line]  # re-insertion moves it to MRU position
             elif len(lru) >= assoc:
                 del lru[next(iter(lru))]  # evict true LRU (oldest key)
             lru[line] = None
-    return CacheStats(accesses=int(rows.size), hits=hits)
+    return CacheStats(accesses=int(rows.size), hits=hits, cold_misses=cold)
+
+
+def simulate_traces(
+    traces: Sequence[np.ndarray],
+    cfg: CacheConfig = CacheConfig(),
+    *,
+    row_bytes: int = 64,
+) -> CacheStats:
+    """Simulate several independent cache units and aggregate their counts.
+
+    Each trace is one unit's row-index access stream — a per-PE cache in
+    the paper's accelerator, or a per-shard stream of the distributed
+    path.  Units do not share state (the paper's caches are private per
+    PE), so hits/misses simply sum.  This is the entry point the
+    experiment engine uses on EXECUTED nonzero orders captured from the
+    MTTKRP execution plan (``MTTKRPPlan.executed_row_trace``) or the
+    shard partitioning (DESIGN.md §7).
+    """
+    total = CacheStats(accesses=0, hits=0)
+    for trace in traces:
+        total = total.merge(simulate_trace(np.asarray(trace), cfg, row_bytes=row_bytes))
+    return total
 
 
 def che_hit_rate(
-    num_rows: int, cache_rows: int, *, zipf_alpha: float = 0.7, samples: int = 200_000
+    num_rows: int,
+    cache_rows: int,
+    *,
+    zipf_alpha: float = 0.7,
+    samples: int = 200_000,
+    trace_length: float | None = None,
 ) -> float:
     """Che's approximation: LRU hit rate for Zipf(alpha) popularity.
 
     Solves sum_i (1 - exp(-p_i * T)) = C for the characteristic time T,
     then hit = sum_i p_i (1 - exp(-p_i * T)).  For num_rows <= cache_rows
     this returns ~1 (compulsory misses are handled by the caller).
+
+    ``trace_length`` extends the approximation to a FINITE trace of L
+    accesses (the transient/cold-start regime a measured executed trace
+    lives in, DESIGN.md §7): the hit probability of the access at
+    position t is ``1 − exp(−p_i · min(T, t))`` — the reuse window cannot
+    reach back before the trace starts — averaged in closed form over
+    t ∈ [0, L].  It interpolates between ``1 − E[distinct]/L`` in the
+    never-evict regime (L ≤ T, e.g. a cache larger than the catalog) and
+    the steady-state Che value as L → ∞, which is what makes a finite
+    measured run comparable to the model at all.
     """
     if num_rows <= 0:
         return 1.0
-    if num_rows <= cache_rows:
+    if trace_length is None and num_rows <= cache_rows:
         return 1.0
     n = min(num_rows, samples)
     # Subsample ranks geometrically for very large catalogs to keep it fast.
@@ -158,16 +237,35 @@ def che_hit_rate(
     z = float((p * weights).sum())
     p /= z
 
-    lo, hi = 1.0, 1e16
-    for _ in range(200):
-        mid = np.sqrt(lo * hi)
-        filled = float(((1.0 - np.exp(-p * mid)) * weights).sum())
-        if filled > cache_rows:
-            hi = mid
-        else:
-            lo = mid
-        if hi / lo < 1 + 1e-9:
-            break
-    t_char = np.sqrt(lo * hi)
-    hit = float((p * (1.0 - np.exp(-p * t_char)) * weights).sum())
+    if num_rows <= cache_rows:
+        t_char = np.inf  # nothing is ever evicted
+    else:
+        lo, hi = 1.0, 1e16
+        for _ in range(200):
+            mid = np.sqrt(lo * hi)
+            filled = float(((1.0 - np.exp(-p * mid)) * weights).sum())
+            if filled > cache_rows:
+                hi = mid
+            else:
+                lo = mid
+            if hi / lo < 1 + 1e-9:
+                break
+        t_char = np.sqrt(lo * hi)
+
+    if trace_length is None:
+        hit = float((p * (1.0 - np.exp(-p * t_char)) * weights).sum())
+        return min(max(hit, 0.0), 1.0)
+
+    L = float(trace_length)
+    if L <= 0:
+        return 1.0
+    if L <= t_char:
+        # reuse window never saturates: average of 1 − exp(−p·t) over [0, L]
+        term = 1.0 - (1.0 - np.exp(-p * L)) / (p * L)
+    else:
+        # saturated tail at min(T, t) = T plus the transient head [0, T]
+        term = 1.0 - (
+            (1.0 - np.exp(-p * t_char)) / p + (L - t_char) * np.exp(-p * t_char)
+        ) / L
+    hit = float((p * term * weights).sum())
     return min(max(hit, 0.0), 1.0)

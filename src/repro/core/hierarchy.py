@@ -459,14 +459,21 @@ class LevelTraffic:
 
 
 def split_capacity_hit_rates(
-    tensor: "FrosttTensor", mode: int, *, capacity_bytes: int, rank: int
+    tensor: "FrosttTensor",
+    mode: int,
+    *,
+    capacity_bytes: int,
+    rank: int,
+    trace_length: float | None = None,
 ) -> tuple[float, ...]:
     """Che/LRU hit rate per input factor for a shared row-cache capacity.
 
     The capacity (whatever memory plays the factor-row cache — the FPGA
     cache subsystem, TPU VMEM, or a photonic IMC array) is split evenly
     across the N-1 input factor matrices (§IV: 'Each cache is shared with
-    multiple input factor matrices').
+    multiple input factor matrices').  ``trace_length`` switches the Che
+    solve to its finite-trace (transient) form — used by the experiment
+    engine to reconcile measured executed traces (DESIGN.md §7).
     """
     row_bytes = rank * 4
     total_rows = capacity_bytes // row_bytes
@@ -477,7 +484,12 @@ def split_capacity_hit_rates(
         if k == mode:
             continue
         hits.append(
-            che_hit_rate(tensor.dims[k], rows_per_input, zipf_alpha=tensor.zipf_alpha)
+            che_hit_rate(
+                tensor.dims[k],
+                rows_per_input,
+                zipf_alpha=tensor.zipf_alpha,
+                trace_length=trace_length,
+            )
         )
     return tuple(hits)
 

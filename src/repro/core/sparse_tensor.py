@@ -140,6 +140,25 @@ class MTTKRPPlan:
         real = int((self.sorted_values != 0).sum())
         return self.nnz_pad / max(real, 1)
 
+    def executed_row_trace(self, k: int, *, include_padding: bool = True) -> np.ndarray:
+        """Factor-``k`` row indices in the order the kernel accesses them.
+
+        This is the trace-capture hook for the experiment engine
+        (DESIGN.md §7): the plan's linearization IS the executed nonzero
+        order, so column ``k`` of ``sorted_indices`` is exactly the
+        access stream the cache subsystem sees for input factor ``k``.
+        ``include_padding=True`` keeps the padding rows' gathers (they
+        fetch a real factor row — row 0 / the block's first output row —
+        so the hardware cache sees them too); ``False`` restricts to real
+        nonzeros.
+        """
+        if not (0 <= k < len(self.shape)):
+            raise ValueError(f"factor {k} out of range for {len(self.shape)}-mode plan")
+        trace = self.sorted_indices[:, k]
+        if include_padding:
+            return trace.copy()
+        return trace[self.sorted_values != 0]
+
 
 def build_mttkrp_plan(
     tensor: SparseTensor,
@@ -226,6 +245,10 @@ def random_sparse_tensor(
     ``zipf_a`` controls mode-index skew (higher → more locality), used to
     emulate the access-locality differences across FROSTT tensors that
     drive the paper's cache-sensitivity results (NELL-2 vs NELL-1).
+    Indices are drawn from a TRUE bounded Zipf law (p_rank ∝ rank^-a,
+    inverse-CDF sampled) — the same popularity model ``che_hit_rate``
+    solves, so executed-trace hit rates on these tensors are directly
+    reconcilable with the Che approximation (DESIGN.md §7).
     Duplicate coordinates are coalesced.
     """
     rng = np.random.default_rng(seed)
@@ -234,9 +257,11 @@ def random_sparse_tensor(
         if zipf_a is None:
             cols.append(rng.integers(0, dim, size=nnz, dtype=np.int64))
         else:
-            # Bounded Zipf via inverse-CDF on a truncated power law.
-            u = rng.random(nnz)
-            ranks = np.floor(dim * u ** zipf_a).astype(np.int64)
+            # Bounded Zipf (p ∝ rank^-a) via inverse-CDF sampling.
+            p = np.arange(1, dim + 1, dtype=np.float64) ** (-float(zipf_a))
+            cdf = np.cumsum(p)
+            cdf /= cdf[-1]
+            ranks = np.searchsorted(cdf, rng.random(nnz), side="left")
             perm = rng.permutation(dim)  # decorrelate rank from index value
             cols.append(perm[np.clip(ranks, 0, dim - 1)])
     idx = np.stack(cols, axis=1)

@@ -13,9 +13,25 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
-from repro.data.frostt import FROSTT_TENSORS
+from repro.data.frostt import FROSTT_TENSORS, FrosttTensor
 
-__all__ = ["make_frostt_like", "scaled_dims"]
+__all__ = [
+    "make_frostt_like",
+    "scaled_dims",
+    "scaled_characteristics",
+    "EXPERIMENT_SCALES",
+]
+
+# Default (name, scale) pairs for the end-to-end experiment engine
+# (repro.experiments): chosen so CP-ALS is executable in seconds per impl
+# while the scaled tensors keep each dataset's mode-ratio / skew regime.
+# LBNL keeps its 5-mode structure; its 868K-row mode makes the Pallas
+# plan's block padding explode, so the engine runs it on ref/sharded only.
+EXPERIMENT_SCALES: dict[str, float] = {
+    "NELL-2": 2e-4,
+    "LBNL": 2e-2,
+    "PATENTS": 2e-5,
+}
 
 
 def scaled_dims(name: str, scale: float) -> tuple[int, ...]:
@@ -32,3 +48,26 @@ def make_frostt_like(name: str, *, scale: float = 1e-3, seed: int = 0) -> Sparse
     # Cap so tests stay fast even for PATENTS/REDDIT.
     nnz = min(nnz, 2_000_000)
     return random_sparse_tensor(dims, nnz, seed=seed, zipf_a=t.zipf_alpha)
+
+
+def scaled_characteristics(
+    name: str, tensor: SparseTensor, *, scale: float
+) -> FrosttTensor:
+    """Table-II-style characteristics of a MATERIALIZED scaled tensor.
+
+    The analytic model consumes a ``FrosttTensor`` record; for the
+    experiment engine the record must describe the tensor that actually
+    ran (post-coalescing nnz, actual dims), not the full-size original —
+    that is what makes the measured and modeled sides of the
+    reconciliation price the same workload (DESIGN.md §7).  The skew
+    parameter is inherited: ``make_frostt_like`` draws indices with the
+    catalog's ``zipf_alpha``, so it characterizes the scaled tensor too.
+    """
+    t = FROSTT_TENSORS[name]
+    return FrosttTensor(
+        name=f"{name}@{scale:g}",
+        dims=tensor.shape,
+        nnz=tensor.nnz,
+        density=tensor.density,
+        zipf_alpha=t.zipf_alpha,
+    )

@@ -30,6 +30,7 @@ from repro.dse.evaluator import (
     SweepResult,
     evaluate_sweep,
     exact_hit_rates,
+    geometry_sim_config,
 )
 from repro.dse.pareto import (
     ParetoPoint,
@@ -65,6 +66,7 @@ __all__ = [
     "SweepResult",
     "evaluate_sweep",
     "exact_hit_rates",
+    "geometry_sim_config",
     "ParetoPoint",
     "pareto_frontier",
     "rank_configurations",

@@ -54,6 +54,7 @@ __all__ = [
     "SweepResult",
     "exact_hit_rates",
     "evaluate_sweep",
+    "geometry_sim_config",
 ]
 
 # Above this nonzero count the exact LRU simulation is slower than the Che
@@ -71,25 +72,23 @@ def _geometry_of(accel: AcceleratorConfig) -> CacheGeometry:
     )
 
 
-def exact_hit_rates_for_geometry(
-    tensor: SparseTensor,
-    mode: int,
-    geometry: CacheGeometry,
-    rank: int,
-) -> tuple[float, ...]:
-    """Exact LRU hit rate per input factor over the mode-ordered trace.
+def geometry_sim_config(
+    geometry: CacheGeometry, rank: int, *, n_inputs: int
+) -> tuple[CacheConfig, int]:
+    """One input factor's share of a level as a simulatable ``CacheConfig``.
 
     Mirrors the capacity split of ``split_capacity_hit_rates``: the
-    level's capacity is divided evenly across the N-1 input factor
-    matrices, and each input's row-index column of the (output-mode-
-    sorted) nonzero stream is simulated against its share.
+    level's capacity is divided evenly across the ``n_inputs`` input
+    factor matrices.  Returns ``(config, row_bytes)`` ready for
+    ``cache_sim.simulate_trace(s)``.  The single definition shared by the
+    DSE trace method and the experiment engine's executed-trace
+    measurement (repro.experiments), so the two cannot drift.
     """
     row_bytes = rank * 4
     line_bytes = geometry.line_bytes if geometry.line_bytes is not None else row_bytes
     lines_per_row = max(1, -(-row_bytes // line_bytes))
     total_rows = geometry.capacity_bytes // row_bytes
-    n_inputs = max(1, tensor.nmodes - 1)
-    rows_per_input = max(1, total_rows // n_inputs)
+    rows_per_input = max(1, total_rows // max(1, n_inputs))
 
     # associativity=None means fully associative: one set holding the
     # whole share.  (HitRateCache routes such levels to Che for speed, but
@@ -100,6 +99,23 @@ def exact_hit_rates_for_geometry(
     num_lines = rows_per_input * lines_per_row
     num_lines = max(assoc, -(-num_lines // assoc) * assoc)  # multiple of assoc
     cfg = CacheConfig(num_lines=num_lines, line_bytes=line_bytes, associativity=assoc)
+    return cfg, row_bytes
+
+
+def exact_hit_rates_for_geometry(
+    tensor: SparseTensor,
+    mode: int,
+    geometry: CacheGeometry,
+    rank: int,
+) -> tuple[float, ...]:
+    """Exact LRU hit rate per input factor over the mode-ordered trace.
+
+    Each input's row-index column of the (output-mode-sorted) nonzero
+    stream is simulated against its capacity share
+    (``geometry_sim_config``).
+    """
+    n_inputs = max(1, tensor.nmodes - 1)
+    cfg, row_bytes = geometry_sim_config(geometry, rank, n_inputs=n_inputs)
 
     ordered = tensor.mode_sorted(mode)
     hits = []

@@ -1,0 +1,55 @@
+"""End-to-end experiment engine (DESIGN.md §7).
+
+Executes real CP-ALS sweeps on scaled FROSTT tensors through every MTTKRP
+impl, captures per-mode wall time / HLO cost / executed-order exact cache
+traces, prices the same runs on all four memory stacks via the DSE
+evaluator, and reconciles measured against modeled:
+
+  * ``repro.experiments.measure`` — instrumented runs + trace capture;
+  * ``repro.experiments.engine``  — orchestration, pricing, residuals,
+    the ``BENCH_experiments.json`` payload;
+  * ``repro.experiments.worker``  — subprocess entry point for the
+    8-device sharded measurement.
+
+Driven by ``scripts/run_experiments.py`` (``make experiments``).
+"""
+
+from repro.experiments.engine import (
+    ALL_TECHS,
+    CHE_VS_TRACE_TOL,
+    ExperimentResult,
+    ExperimentSpec,
+    HitRateReconciliation,
+    RunResult,
+    TechReconciliation,
+    run_experiments,
+)
+from repro.experiments.measure import (
+    ExecutedTraceHitRates,
+    MeasuredMode,
+    MeasuredRun,
+    executed_input_traces,
+    executed_trace_stats,
+    executed_traces,
+    measure_cp_als,
+    mode_cost_analysis,
+)
+
+__all__ = [
+    "ALL_TECHS",
+    "CHE_VS_TRACE_TOL",
+    "ExperimentResult",
+    "ExperimentSpec",
+    "HitRateReconciliation",
+    "RunResult",
+    "TechReconciliation",
+    "run_experiments",
+    "ExecutedTraceHitRates",
+    "MeasuredMode",
+    "MeasuredRun",
+    "executed_input_traces",
+    "executed_trace_stats",
+    "executed_traces",
+    "measure_cp_als",
+    "mode_cost_analysis",
+]

@@ -1,0 +1,455 @@
+"""Measured CP-ALS runs: wall time, HLO cost, executed-trace hit rates.
+
+The measurement half of the experiment engine (DESIGN.md §7): run real
+CP-ALS sweeps through one MTTKRP impl (``ref`` / ``pallas`` / ``sharded``)
+and capture, per mode,
+
+  * wall time of every MTTKRP call (``jax.block_until_ready``-fenced),
+    with the first call separated out as compile/warmup;
+  * ``jax.jit(...).lower(...).compile().cost_analysis()`` FLOPs and bytes
+    for the mode's computation, next to the paper's ``2·N·|T|·R`` closed
+    form;
+  * the EXECUTED nonzero order — the raw COO order for ``ref``, the
+    mode-ordered plan linearization for ``pallas``
+    (``MTTKRPPlan.executed_row_trace``), the per-shard partitions for
+    ``sharded`` — simulated exactly against any ``CacheGeometry`` via
+    ``repro.core.cache_sim.simulate_traces``.
+
+``ExecutedTraceHitRates`` packages the last part as a drop-in
+``HitRateCache``, so the DSE evaluator prices the measured runs on every
+technology without a separate pricing path (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.cache_sim import CacheStats, simulate_traces
+from repro.core.hierarchy import CacheGeometry
+from repro.core.sparse_tensor import MTTKRPPlan, SparseTensor, build_mttkrp_plan
+from repro.data.frostt import FrosttTensor
+from repro.dse.evaluator import HitRateCache, geometry_sim_config
+
+__all__ = [
+    "MeasuredMode",
+    "MeasuredRun",
+    "measure_cp_als",
+    "mode_cost_analysis",
+    "executed_input_traces",
+    "executed_traces",
+    "executed_trace_stats",
+    "ExecutedTraceHitRates",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredMode:
+    """Wall-clock + HLO-cost measurements of one mode's MTTKRP calls."""
+
+    mode: int
+    calls: int
+    first_s: float  # first call (includes trace/compile)
+    steady_s: float  # median of the post-first calls (first if only one)
+    total_s: float
+    flops: float | None  # jax cost_analysis, None when unavailable
+    bytes_accessed: float | None
+    paper_flops: float  # closed form 2·N·|T|·R (§IV-A)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredRun:
+    """One executed CP-ALS sweep of one impl on one scaled tensor."""
+
+    tensor: str
+    impl: str
+    rank: int
+    n_iters: int
+    fit: float
+    iters: int
+    wall_s: float
+    modes: tuple[MeasuredMode, ...]
+
+    @property
+    def steady_mode_s(self) -> tuple[float, ...]:
+        return tuple(m.steady_s for m in self.modes)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["modes"] = [m.to_dict() for m in self.modes]
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "MeasuredRun":
+        modes = tuple(MeasuredMode(**m) for m in d["modes"])
+        return MeasuredRun(**{**d, "modes": modes})
+
+
+def mode_cost_analysis(
+    tensor: SparseTensor, rank: int, mode: int, impl: str
+) -> tuple[float | None, float | None]:
+    """(flops, bytes accessed) of one mode's MTTKRP from the compiled HLO.
+
+    Lowers the impl's computation with jax and reads the backend's
+    ``cost_analysis()``.  Returns ``(None, None)`` when the backend does
+    not expose one for this computation (Pallas custom calls on some
+    backends; the sharded path is measured in its own process).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.cp_als import cp_init
+    from repro.core.mttkrp import mttkrp_ref
+
+    try:
+        factors = cp_init(tensor, rank, seed=0)
+        idx = jnp.asarray(tensor.indices)
+        vals = jnp.asarray(tensor.values)
+        if impl == "pallas":
+            from repro.kernels.mttkrp.ops import mttkrp_pallas
+
+            plan = build_mttkrp_plan(tensor, mode)
+
+            def fn(*facs):
+                return mttkrp_pallas(tensor, facs, mode, plan=plan, interpret=True)
+
+        else:  # ref order; also the stand-in cost for sharded per-shard work
+
+            def fn(*facs):
+                return mttkrp_ref((idx, vals, tensor.shape), facs, mode)
+
+        compiled = jax.jit(fn).lower(*factors).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        if not ca:
+            return None, None
+        flops = ca.get("flops")
+        nbytes = ca.get("bytes accessed")
+        return (
+            float(flops) if flops is not None else None,
+            float(nbytes) if nbytes is not None else None,
+        )
+    except Exception:
+        return None, None
+
+
+def measure_cp_als(
+    tensor: SparseTensor,
+    *,
+    name: str,
+    rank: int = 16,
+    n_iters: int = 3,
+    impl: str = "ref",
+    seed: int = 0,
+    scheme: str = "mode_ordered",
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    cost_analysis: bool = True,
+) -> MeasuredRun:
+    """Run CP-ALS with an instrumented MTTKRP and collect per-mode timings.
+
+    Every MTTKRP call is fenced with ``jax.block_until_ready`` so the
+    recorded interval covers the full call as the driver experiences it.
+    For ``ref``/``pallas`` that is essentially device work (their jitted
+    callables are compile-cached); the ``sharded`` path re-partitions the
+    nonzeros and re-traces its shard_map on every call, so its times
+    include that host-side dispatch cost — a real cost of the path as
+    implemented, reported as such.  The first call per mode additionally
+    carries trace/compile cost and is separated out (``first_s``);
+    ``steady_s`` is the median of the remaining calls.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.cp_als import cp_als
+    from repro.core.mttkrp import mttkrp_ref
+
+    idx = jnp.asarray(tensor.indices)
+    vals = jnp.asarray(tensor.values)
+    if impl == "ref":
+
+        def base(t, f, m):
+            return mttkrp_ref((idx, vals, t.shape), f, m)
+
+    elif impl == "pallas":
+        from repro.kernels.mttkrp.ops import mttkrp_pallas
+
+        plans = {
+            m: build_mttkrp_plan(
+                tensor, m, tile_nnz=tile_nnz, rows_per_block=rows_per_block
+            )
+            for m in range(tensor.nmodes)
+        }
+
+        def base(t, f, m):
+            return mttkrp_pallas(t, f, m, plan=plans[m], interpret=True)
+
+    elif impl == "sharded":
+        from repro.distributed.mttkrp_dist import mttkrp_sharded
+
+        def base(t, f, m):
+            return mttkrp_sharded(t, f, m, scheme=scheme)
+
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+
+    call_s: dict[int, list[float]] = {m: [] for m in range(tensor.nmodes)}
+
+    def timed(t, f, m):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(base(t, f, m))
+        call_s[m].append(time.perf_counter() - t0)
+        return out
+
+    t0 = time.perf_counter()
+    state = cp_als(
+        tensor, rank, n_iters=n_iters, tol=0.0, seed=seed, mttkrp_fn=timed
+    )
+    wall_s = time.perf_counter() - t0
+
+    modes = []
+    for m in range(tensor.nmodes):
+        ts = call_s[m]
+        steady = ts[1:] if len(ts) > 1 else ts
+        flops = nbytes = None
+        if cost_analysis:
+            flops, nbytes = mode_cost_analysis(tensor, rank, m, impl)
+        modes.append(
+            MeasuredMode(
+                mode=m,
+                calls=len(ts),
+                first_s=ts[0],
+                steady_s=float(np.median(steady)),
+                total_s=float(sum(ts)),
+                flops=flops,
+                bytes_accessed=nbytes,
+                paper_flops=2.0 * tensor.nmodes * tensor.nnz * rank,
+            )
+        )
+    return MeasuredRun(
+        tensor=name,
+        impl=impl,
+        rank=rank,
+        n_iters=n_iters,
+        fit=state.fit,
+        iters=state.iters,
+        wall_s=wall_s,
+        modes=tuple(modes),
+    )
+
+
+# --------------------------------------------------------------------------
+# Executed-order trace capture
+# --------------------------------------------------------------------------
+
+
+def executed_input_traces(
+    tensor: SparseTensor,
+    impl: str,
+    mode: int,
+    *,
+    scheme: str = "mode_ordered",
+    n_shards: int = 8,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+) -> dict[int, list[np.ndarray]]:
+    """Per input factor ``k``, the row-index streams ``impl`` accesses.
+
+    One array per independent cache unit: a single stream for ``ref``
+    (raw COO order — the ref impl never reorders) and ``pallas`` (the
+    plan's mode-ordered linearization), one stream per shard for
+    ``sharded`` — a private slice of the mode-sorted stream under the
+    ``mode_ordered`` scheme (mirroring the paper's per-PE caches), or a
+    contiguous block of the RAW order under ``allreduce``.  Padding
+    gathers (value-0 rows the equal-shape layouts introduce) are
+    EXCLUDED: they fetch only a block's first row, do no useful work, and
+    would inflate the measured reuse of exactly the streams the
+    reconciliation is trying to compare against the model.
+
+    The ordering work (plan build / shard partitioning, O(nnz log nnz))
+    happens once per (impl, mode) here — callers needing several cache
+    geometries reuse the result.
+    """
+    inputs = [k for k in range(tensor.nmodes) if k != mode]
+    if impl == "ref":
+        return {k: [tensor.indices[:, k]] for k in inputs}
+    if impl == "pallas":
+        plan = build_mttkrp_plan(
+            tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block
+        )
+        return {
+            k: [plan.executed_row_trace(k, include_padding=False)] for k in inputs
+        }
+    if impl == "sharded":
+        if scheme == "allreduce":
+            # Raw-order nonzeros block-sharded over the data axis: the
+            # same equal-height blocks mttkrp_sharded pads to (last shard
+            # short of padding).
+            per = -(-tensor.nnz // n_shards)
+            bounds = [min(i * per, tensor.nnz) for i in range(n_shards + 1)]
+            return {
+                k: [
+                    tensor.indices[a:b, k]
+                    for a, b in zip(bounds[:-1], bounds[1:])
+                ]
+                for k in inputs
+            }
+        from repro.distributed.mttkrp_dist import partition_by_output_rows
+
+        idx_s, val_s, _row_start = partition_by_output_rows(tensor, mode, n_shards)
+        return {
+            k: [idx_s[i, val_s[i] != 0, k] for i in range(n_shards)]
+            for k in inputs
+        }
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def executed_traces(
+    tensor: SparseTensor,
+    impl: str,
+    mode: int,
+    k: int,
+    *,
+    scheme: str = "mode_ordered",
+    n_shards: int = 8,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+) -> list[np.ndarray]:
+    """Single-input convenience wrapper around ``executed_input_traces``."""
+    return executed_input_traces(
+        tensor,
+        impl,
+        mode,
+        scheme=scheme,
+        n_shards=n_shards,
+        tile_nnz=tile_nnz,
+        rows_per_block=rows_per_block,
+    )[k]
+
+
+def executed_trace_stats(
+    tensor: SparseTensor,
+    impl: str,
+    mode: int,
+    geometry: CacheGeometry,
+    rank: int,
+    *,
+    scheme: str = "mode_ordered",
+    n_shards: int = 8,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    input_traces: dict[int, list[np.ndarray]] | None = None,
+) -> tuple[CacheStats, ...]:
+    """Per input factor, exact LRU stats over the executed access order.
+
+    The per-input capacity share comes from the SAME construction the DSE
+    trace method uses (``repro.dse.evaluator.geometry_sim_config``), so a
+    measured hit rate and a DSE trace hit rate on the same geometry are
+    directly comparable.  ``input_traces`` injects a precomputed
+    ``executed_input_traces`` result (the hit-rate memo passes it so the
+    ordering work is not redone per geometry).
+    """
+    n_inputs = max(1, tensor.nmodes - 1)
+    cfg, row_bytes = geometry_sim_config(geometry, rank, n_inputs=n_inputs)
+    if input_traces is None:
+        input_traces = executed_input_traces(
+            tensor,
+            impl,
+            mode,
+            scheme=scheme,
+            n_shards=n_shards,
+            tile_nnz=tile_nnz,
+            rows_per_block=rows_per_block,
+        )
+    out = []
+    for k in range(tensor.nmodes):
+        if k == mode:
+            continue
+        out.append(simulate_traces(input_traces[k], cfg, row_bytes=row_bytes))
+    return tuple(out)
+
+
+class ExecutedTraceHitRates(HitRateCache):
+    """A ``HitRateCache`` that answers from one impl's executed order.
+
+    Passing this to ``repro.dse.evaluate_sweep`` makes the evaluator price
+    every technology's hierarchy with the hit rates the executed run
+    actually produced — the measured side of the reconciliation — while
+    reusing the evaluator's batching and energy pass unchanged.  The full
+    ``CacheStats`` (with compulsory-miss counts, for the Che comparison)
+    are kept in ``stats`` keyed like the memo.
+    """
+
+    def __init__(
+        self,
+        tensor: SparseTensor,
+        impl: str,
+        *,
+        scheme: str = "mode_ordered",
+        n_shards: int = 8,
+        tile_nnz: int = 256,
+        rows_per_block: int = 256,
+    ) -> None:
+        super().__init__()
+        self.tensor = tensor
+        self.impl = impl
+        self.scheme = scheme
+        self.n_shards = n_shards
+        self.tile_nnz = tile_nnz
+        self.rows_per_block = rows_per_block
+        self.stats: dict[tuple, tuple[CacheStats, ...]] = {}
+        self.geometries: dict[tuple, tuple[CacheGeometry, int]] = {}
+        # Executed order depends only on the mode: build the plan /
+        # partition once and reuse across every priced cache geometry.
+        self._input_traces: dict[int, dict[int, list[np.ndarray]]] = {}
+
+    def input_traces(self, mode: int) -> dict[int, list[np.ndarray]]:
+        if mode not in self._input_traces:
+            self._input_traces[mode] = executed_input_traces(
+                self.tensor,
+                self.impl,
+                mode,
+                scheme=self.scheme,
+                n_shards=self.n_shards,
+                tile_nnz=self.tile_nnz,
+                rows_per_block=self.rows_per_block,
+            )
+        return self._input_traces[mode]
+
+    def get(
+        self,
+        tensor: FrosttTensor,
+        mode: int,
+        geometry: CacheGeometry,
+        rank: int,
+        **_ignored,
+    ) -> tuple[float, ...]:
+        if tuple(tensor.dims) != tuple(self.tensor.shape):
+            raise ValueError(
+                f"characteristics {tensor.name!r} (dims {tensor.dims}) do not "
+                f"describe the executed tensor (shape {self.tensor.shape})"
+            )
+        key = (mode, rank) + geometry.key()
+        if key in self._store:
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        stats = executed_trace_stats(
+            self.tensor,
+            self.impl,
+            mode,
+            geometry,
+            rank,
+            input_traces=self.input_traces(mode),
+        )
+        rates = tuple(s.hit_rate for s in stats)
+        self._store[key] = rates
+        self.stats[key] = stats
+        self.geometries[key] = (geometry, mode)
+        return rates

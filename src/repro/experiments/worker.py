@@ -1,0 +1,55 @@
+"""Subprocess worker for multi-device measured runs.
+
+``python -m repro.experiments.worker`` reads a JSON payload on stdin
+(name/scale/seed identify the tensor deterministically; impl is always
+``sharded`` today), runs the instrumented CP-ALS sweep on the forced
+host-device mesh (the parent sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=N`` BEFORE this process first initializes XLA), and prints
+the ``MeasuredRun`` as one JSON line on stdout.  Kept dependency-free on
+the engine so a failed import there cannot mask a worker error.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> int:
+    payload = json.loads(sys.stdin.read())
+
+    import jax
+
+    expected = int(payload.get("devices", 8))
+    if jax.device_count() != expected:
+        print(
+            f"worker: expected {expected} devices, got {jax.device_count()} "
+            "(XLA_FLAGS must be set before first jax init)",
+            file=sys.stderr,
+        )
+        return 2
+
+    from repro.data.synthetic_tensors import make_frostt_like
+    from repro.experiments.measure import measure_cp_als
+
+    tensor = make_frostt_like(
+        payload["name"], scale=payload["scale"], seed=payload["seed"]
+    )
+    run = measure_cp_als(
+        tensor,
+        name=payload["tensor_name"],
+        rank=payload["rank"],
+        n_iters=payload["n_iters"],
+        impl="sharded",
+        seed=payload["seed"],
+        scheme=payload.get("scheme", "mode_ordered"),
+        # cost_analysis lowers the ref closure as a stand-in; the sharded
+        # shard_map path is traced eagerly and has no single compiled HLO.
+        cost_analysis=False,
+    )
+    print(json.dumps(run.to_dict()))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

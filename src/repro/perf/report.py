@@ -3,7 +3,9 @@
 Also renders ``repro.dse`` sweep results (DESIGN.md §8): a generic
 markdown-table renderer (``sweep_table_md``) plus a JSON serializer
 (``sweep_table_json``) used by ``benchmarks/dse_sweep.py`` to emit the
-``BENCH_dse.json`` trajectory artifact.
+``BENCH_dse.json`` trajectory artifact; and the experiment engine's
+measured-vs-modeled report (``experiments_report_md``, DESIGN.md §7)
+rendered from the ``BENCH_experiments.json`` payload.
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ __all__ = [
     "dryrun_summary_md",
     "sweep_table_md",
     "sweep_table_json",
+    "experiments_report_md",
 ]
 
 
@@ -102,6 +105,87 @@ def sweep_table_md(rows: list[dict], columns: list[str] | None = None) -> str:
 def sweep_table_json(rows: list[dict], *, meta: dict | None = None) -> str:
     """Serialize sweep rows (+ optional run metadata) to pretty JSON."""
     return json.dumps({"meta": meta or {}, "rows": rows}, indent=2, sort_keys=False)
+
+
+def experiments_report_md(payload: dict) -> str:
+    """Human-readable report for a ``BENCH_experiments.json`` payload.
+
+    Four sections: the measured CP-ALS runs, the per-technology pricing
+    with share residuals, the reproduced speedup/energy tables (measured-
+    priced next to Che-modeled), and the trace-vs-Che hit-rate
+    reconciliation at the documented tolerance (DESIGN.md §7).
+    """
+    lines: list[str] = []
+
+    measured_rows = []
+    for r in payload["runs"]:
+        m = r["measured"]
+        measured_rows.append(
+            {
+                "tensor": r["tensor"],
+                "impl": r["impl"],
+                "nnz": r["nnz"],
+                "iters": m["iters"],
+                "fit": m["fit"],
+                "mode_ms": "/".join(
+                    f"{mm['steady_s']*1e3:.1f}" for mm in m["modes"]
+                ),
+                "wall_s": m["wall_s"],
+            }
+        )
+    lines.append("## Measured CP-ALS runs (steady-state ms per mode)\n")
+    lines.append(sweep_table_md(measured_rows))
+
+    tech_rows = []
+    for r in payload["runs"]:
+        for t in r["technologies"]:
+            tech_rows.append(
+                {
+                    "tensor": r["tensor"],
+                    "impl": r["impl"],
+                    "tech": t["tech"],
+                    "priced_s": sum(t["priced_mode_s"]),
+                    "modeled_s": sum(t["modeled_mode_s"]),
+                    "energy_j": t["priced_energy_j"],
+                    "max_share_residual": t["max_share_residual"],
+                }
+            )
+    lines.append("\n## Hierarchy pricing (measured hit rates vs Che model)\n")
+    lines.append(sweep_table_md(tech_rows))
+
+    table_rows = []
+    for key, sp in payload["speedup_table"].items():
+        ev = payload["energy_table"][key]
+        table_rows.append(
+            {
+                "run": key,
+                "speedup_priced": sp["priced"],
+                "speedup_modeled": sp["modeled"],
+                "energy_savings_priced": ev["priced"],
+                "energy_savings_modeled": ev["modeled"],
+            }
+        )
+    lines.append("\n## Reproduced paper pair (E-SRAM → O-SRAM)\n")
+    lines.append(sweep_table_md(table_rows))
+
+    tol = payload["che_tolerance"]
+    scenarios = [h for r in payload["runs"] for h in r["hit_rates"]]
+    worst = max(scenarios, key=lambda h: h["max_abs_err"], default=None)
+    lines.append("\n## Hit-rate reconciliation (exact executed trace vs Che)\n")
+    lines.append(
+        f"- {len(scenarios)} priced scenarios, tolerance {tol:.2f}: "
+        + ("ALL WITHIN TOLERANCE" if payload["all_within_tol"] else "VIOLATIONS")
+    )
+    if worst is not None:
+        lines.append(
+            f"- worst |trace − che(L)| = {worst['max_abs_err']:.4f} "
+            f"(capacity {worst['capacity_bytes']} B, mode {worst['mode']})"
+        )
+    if payload.get("skipped"):
+        lines.append("\n## Skipped cells\n")
+        for s in payload["skipped"]:
+            lines.append(f"- {s['tensor']} × {s['impl']}: {s['reason']}")
+    return "\n".join(lines)
 
 
 def dryrun_summary_md(cells: list[dict]) -> str:

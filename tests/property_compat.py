@@ -1,0 +1,93 @@
+"""Property-test front-end: real hypothesis when installed, else a
+deterministic fallback sampler.
+
+The tier-1 property sweeps (tests/test_mttkrp_kernel.py,
+tests/test_flash_kernel.py) must run on every install: with ``hypothesis``
+(requirements-dev.txt; CI installs it) they get real shrinking search;
+on a bare install this module substitutes a seeded random sampler with
+the same ``@settings(...) @given(...)`` surface, so the sweeps execute a
+fixed pseudo-random grid instead of silently skipping.  Only the strategy
+constructors the test-suite uses are implemented (integers, sampled_from,
+booleans, floats).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
+
+    import numpy as _np
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sampler):
+            self._sampler = sampler
+
+        def sample(self, rng):
+            return self._sampler(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        """Records ``max_examples`` on the (possibly already wrapped) test."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        """Runs the test over a deterministic pseudo-random sample grid."""
+
+        def deco(fn):
+            # NB: no functools.wraps — pytest would read the wrapped
+            # signature and treat the sampled parameters as fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = _np.random.default_rng(0xC0FFEE)
+                for case in range(n):
+                    kwargs = {
+                        name: s.sample(rng)
+                        for name, s in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(**kwargs)
+                    except Exception as exc:
+                        raise AssertionError(
+                            f"falsifying example (case {case}): {kwargs}"
+                        ) from exc
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -43,7 +43,72 @@ def test_mttkrp_sharded_matches_ref_both_schemes():
         want = np.asarray(mttkrp_ref(t, facs, mode))
         for scheme in ("allreduce", "mode_ordered"):
             got = np.asarray(mttkrp_sharded(t, facs, mode, scheme=scheme))
-            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4), (mode, scheme)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=str((mode, scheme)))
+    print("OK")
+    """)
+
+
+def test_mttkrp_sharded_differential_3_4_5_modes_uneven_shards():
+    """Both schemes vs the ref oracle on 3/4/5-mode tensors whose nonzero
+    counts do NOT divide the 8 forced devices (uneven shard boundaries
+    exercise the padding + residual-pass logic)."""
+    _run("""
+    from repro.core.sparse_tensor import random_sparse_tensor
+    from repro.core.mttkrp import mttkrp_ref
+    from repro.distributed.mttkrp_dist import mttkrp_sharded
+    cases = [
+        ((61, 47, 33), 1201),        # 1201 = 8*150 + 1
+        ((25, 19, 13, 11), 875),     # 875 % 8 == 3
+        ((13, 11, 9, 7, 5), 403),    # 403 % 8 == 3, 5-mode
+    ]
+    for shape, nnz in cases:
+        t = random_sparse_tensor(shape, nnz=nnz, seed=len(shape))
+        assert t.nnz % 8 != 0, (shape, t.nnz)  # stays uneven after coalescing
+        facs = [jax.random.normal(jax.random.PRNGKey(i), (s, 16))
+                for i, s in enumerate(t.shape)]
+        for mode in range(t.nmodes):
+            want = np.asarray(mttkrp_ref(t, facs, mode))
+            for scheme in ("allreduce", "mode_ordered"):
+                got = np.asarray(mttkrp_sharded(t, facs, mode, scheme=scheme))
+                np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                           err_msg=str((shape, mode, scheme)))
+    print("OK")
+    """)
+
+
+def test_mttkrp_sharded_edge_cases():
+    """The edge cases of tests/test_mttkrp_kernel.py on the sharded path:
+    single nonzero (7 of 8 shards empty), rank 1, every nonzero in one
+    output block, nnz < shard count."""
+    _run("""
+    from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
+    from repro.core.mttkrp import mttkrp_ref
+    from repro.distributed.mttkrp_dist import mttkrp_sharded
+
+    def check(t, rank, seed=0):
+        facs = [jax.random.normal(jax.random.PRNGKey(seed + i), (s, rank))
+                for i, s in enumerate(t.shape)]
+        for mode in range(t.nmodes):
+            want = np.asarray(mttkrp_ref(t, facs, mode))
+            for scheme in ("allreduce", "mode_ordered"):
+                got = np.asarray(mttkrp_sharded(t, facs, mode, scheme=scheme))
+                np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                           err_msg=str((mode, scheme)))
+
+    # single nonzero
+    check(SparseTensor(np.array([[5, 2, 7]], np.int32),
+                       np.array([2.5], np.float32), (11, 6, 9)), rank=8)
+    # rank 1
+    check(random_sparse_tensor((30, 20, 10), nnz=200, seed=21), rank=1)
+    # all nonzeros land in one output block of mode 0
+    rng = np.random.default_rng(4)
+    idx = np.stack([rng.integers(0, 16, 300), rng.integers(0, 40, 300),
+                    rng.integers(0, 40, 300)], axis=1).astype(np.int32)
+    check(SparseTensor(idx, rng.standard_normal(300).astype(np.float32),
+                       (256, 40, 40)), rank=16)
+    # fewer nonzeros than devices
+    check(random_sparse_tensor((40, 30, 20), nnz=5, seed=13), rank=16)
     print("OK")
     """)
 

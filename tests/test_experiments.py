@@ -1,0 +1,280 @@
+"""repro.experiments: trace capture, transient Che, engine reconciliation.
+
+The heavier end-to-end sweeps live in ``make experiments`` / CI smoke;
+here the engine runs its smallest configuration (ref impl, tiny scale)
+plus unit-level checks of every new measurement primitive.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cache_sim import CacheConfig, che_hit_rate, simulate_trace, simulate_traces
+from repro.core.hierarchy import CacheGeometry
+from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
+from repro.data.synthetic_tensors import make_frostt_like, scaled_characteristics
+from repro.dse.evaluator import exact_hit_rates_for_geometry
+from repro.experiments import (
+    CHE_VS_TRACE_TOL,
+    ExecutedTraceHitRates,
+    ExperimentSpec,
+    measure_cp_als,
+    run_experiments,
+)
+from repro.experiments.measure import executed_trace_stats, executed_traces
+
+FPGA_GEOM = CacheGeometry(capacity_bytes=786432, line_bytes=64, associativity=4)
+
+
+# --- cache_sim trace hooks --------------------------------------------------
+
+
+def test_cold_misses_counted_and_warm_rate():
+    cfg = CacheConfig(num_lines=64, line_bytes=64, associativity=4)
+    trace = np.array([1, 2, 3, 1, 2, 3, 4, 1], dtype=np.int64)
+    stats = simulate_trace(trace, cfg)
+    assert stats.cold_misses == 4  # rows 1,2,3,4 first touches
+    assert stats.hits == 4  # everything after its first touch hits
+    assert stats.warm_hit_rate == 1.0
+    assert stats.hit_rate == 0.5
+
+
+def test_simulate_traces_aggregates_independent_units():
+    cfg = CacheConfig(num_lines=64, line_bytes=64, associativity=4)
+    a = np.array([1, 1, 1], dtype=np.int64)
+    b = np.array([2, 2], dtype=np.int64)
+    merged = simulate_traces([a, b], cfg)
+    sa, sb = simulate_trace(a, cfg), simulate_trace(b, cfg)
+    assert merged.accesses == sa.accesses + sb.accesses
+    assert merged.hits == sa.hits + sb.hits
+    assert merged.cold_misses == sa.cold_misses + sb.cold_misses
+
+
+def test_generic_and_fast_path_agree_on_cold_misses():
+    rng = np.random.default_rng(0)
+    trace = rng.integers(0, 200, size=2000)
+    cfg = CacheConfig(num_lines=128, line_bytes=64, associativity=4)
+    fast = simulate_trace(trace, cfg, row_bytes=64)  # 1 line/row fast path
+    slow = simulate_trace(trace, cfg, row_bytes=128)  # generic path, 2 lines
+    assert fast.cold_misses == len(np.unique(trace))
+    assert slow.cold_misses == 2 * len(np.unique(trace))
+
+
+# --- transient Che ----------------------------------------------------------
+
+
+def test_che_transient_matches_distinct_formula_when_nothing_evicts():
+    # Cache larger than catalog: hit(L) must equal 1 - E[distinct]/L.
+    num_rows, L = 500, 2000
+    got = che_hit_rate(num_rows, 10_000, zipf_alpha=0.8, trace_length=L)
+    p = np.arange(1, num_rows + 1) ** -0.8
+    p /= p.sum()
+    expected = 1.0 - (1.0 - np.exp(-p * L)).sum() / L
+    assert abs(got - expected) < 1e-9
+
+
+def test_che_transient_converges_to_steady_state():
+    steady = che_hit_rate(4096, 512, zipf_alpha=0.9)
+    finite = che_hit_rate(4096, 512, zipf_alpha=0.9, trace_length=5e7)
+    assert abs(steady - finite) < 0.01
+    # and the transient value is below steady state (cold start hurts)
+    short = che_hit_rate(4096, 512, zipf_alpha=0.9, trace_length=2000)
+    assert short < steady
+
+
+def test_che_steady_state_path_unchanged():
+    # trace_length=None must reproduce the historical result bit-for-bit
+    # (golden fixtures elsewhere depend on it).
+    assert che_hit_rate(4096, 512, zipf_alpha=0.9) == che_hit_rate(
+        4096, 512, zipf_alpha=0.9, trace_length=None
+    )
+    assert che_hit_rate(100, 512, zipf_alpha=0.9) == 1.0
+
+
+def test_che_transient_predicts_measured_zipf_trace():
+    # An actual IRM Zipf trace: |simulated - che(L)| within the tolerance
+    # in a regime where the steady-state value would be far off.
+    rng = np.random.default_rng(7)
+    n_rows, cache_rows, L = 50_000, 16_384, 20_000
+    p = np.arange(1, n_rows + 1, dtype=np.float64) ** -0.75
+    p /= p.sum()
+    trace = rng.choice(n_rows, size=L, p=p)
+    cfg = CacheConfig(num_lines=cache_rows, line_bytes=64, associativity=4)
+    sim = simulate_trace(trace, cfg).hit_rate
+    che_l = che_hit_rate(n_rows, cache_rows, zipf_alpha=0.75, trace_length=L)
+    che_inf = che_hit_rate(n_rows, cache_rows, zipf_alpha=0.75)
+    assert abs(sim - che_l) < CHE_VS_TRACE_TOL, (sim, che_l)
+    assert abs(sim - che_inf) > 0.15  # steady state alone would NOT reconcile
+
+
+# --- executed-order trace capture ------------------------------------------
+
+
+def test_executed_row_trace_matches_plan_order():
+    t = random_sparse_tensor((40, 30, 20), nnz=300, seed=3)
+    plan = build_mttkrp_plan(t, 0, tile_nnz=32, rows_per_block=16)
+    full = plan.executed_row_trace(1)
+    real = plan.executed_row_trace(1, include_padding=False)
+    assert full.shape[0] == plan.nnz_pad
+    assert real.shape[0] == (plan.sorted_values != 0).sum()
+    # real-nonzero subsequence preserves the plan's sorted order
+    np.testing.assert_array_equal(real, plan.sorted_indices[plan.sorted_values != 0, 1])
+    with pytest.raises(ValueError):
+        plan.executed_row_trace(3)
+
+
+def test_pallas_trace_stats_match_dse_trace_method():
+    """The pallas executed order IS the mode-sorted order the DSE trace
+    method simulates, so their hit rates must agree exactly."""
+    t = make_frostt_like("NELL-2", scale=1e-4, seed=0)
+    for mode in range(t.nmodes):
+        stats = executed_trace_stats(t, "pallas", mode, FPGA_GEOM, 16)
+        dse = exact_hit_rates_for_geometry(t, mode, FPGA_GEOM, 16)
+        got = tuple(s.hit_rate for s in stats)
+        assert got == pytest.approx(dse, abs=1e-12), mode
+
+
+def test_ref_and_pallas_traces_are_permutations():
+    t = random_sparse_tensor((50, 40, 30), nnz=400, seed=5)
+    (ref_trace,) = executed_traces(t, "ref", 0, 1)
+    (pal_trace,) = executed_traces(t, "pallas", 0, 1)
+    assert sorted(ref_trace.tolist()) == sorted(pal_trace.tolist())
+
+
+def test_sharded_traces_cover_all_nonzeros_once():
+    t = random_sparse_tensor((64, 48, 32), nnz=777, seed=9)  # uneven vs 8
+    traces = executed_traces(t, "sharded", 0, 2, n_shards=8)
+    assert len(traces) == 8
+    merged = np.concatenate(traces)
+    assert merged.shape[0] == t.nnz
+    assert sorted(merged.tolist()) == sorted(t.indices[:, 2].tolist())
+
+
+def test_sharded_allreduce_traces_keep_raw_order():
+    """scheme='allreduce' block-shards the RAW nonzero order — the trace
+    capture must follow the scheme actually executed, not mode_ordered."""
+    t = random_sparse_tensor((64, 48, 32), nnz=333, seed=2)
+    traces = executed_traces(t, "sharded", 0, 1, scheme="allreduce", n_shards=8)
+    np.testing.assert_array_equal(np.concatenate(traces), t.indices[:, 1])
+    per = -(-t.nnz // 8)
+    assert all(len(tr) == per for tr in traces[:-1])
+    ordered = executed_traces(t, "sharded", 0, 1, scheme="mode_ordered", n_shards=8)
+    assert [len(x) for x in ordered] != [len(x) for x in traces] or not np.array_equal(
+        np.concatenate(ordered), np.concatenate(traces)
+    )
+
+
+def test_hit_rate_memo_reuses_per_mode_traces():
+    t = make_frostt_like("NELL-2", scale=1e-4, seed=0)
+    cache = ExecutedTraceHitRates(t, "pallas")
+    big = CacheGeometry(capacity_bytes=54 * 2**20, line_bytes=None, associativity=None)
+    cache.get(scaled_characteristics("NELL-2", t, scale=1e-4), 0, FPGA_GEOM, 16)
+    cache.get(scaled_characteristics("NELL-2", t, scale=1e-4), 0, big, 16)
+    # two geometries, one plan build: the executed order was memoized
+    assert list(cache._input_traces) == [0]
+    assert cache.misses == 2
+
+
+# --- the engine, smallest configuration ------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_result():
+    spec = ExperimentSpec(
+        tensors=(("NELL-2", 1e-4),),
+        impls=("ref",),
+        n_iters=2,
+        cost_analysis=True,
+    )
+    return run_experiments(spec)
+
+
+def test_engine_prices_all_four_technologies(tiny_result):
+    (run,) = tiny_result.runs
+    assert {t.tech for t in run.techs} == {
+        "E-SRAM",
+        "O-SRAM",
+        "tpu-v5e-class",
+        "pSRAM-IMC",
+    }
+    for t in run.techs:
+        assert len(t.measured_mode_s) == len(t.priced_mode_s) == 3
+        assert all(s > 0 for s in t.priced_mode_s)
+        assert all(s > 0 for s in t.modeled_mode_s)
+        assert len(t.share_residuals) == 3
+        assert abs(sum(t.share_residuals)) < 1e-9  # shares both sum to 1
+    assert run.tech("tpu-v5e-class").priced_energy_j is None
+    assert run.tech("E-SRAM").priced_energy_j > 0
+
+
+def test_engine_measured_runs_are_real(tiny_result):
+    (run,) = tiny_result.runs
+    m = run.measured
+    assert m.iters == 2 and m.impl == "ref"
+    assert all(mm.calls == 2 for mm in m.modes)
+    assert all(mm.steady_s > 0 for mm in m.modes)
+    assert all(
+        mm.flops is None or mm.flops > 0 for mm in m.modes
+    )  # cost_analysis when the backend provides it
+    assert all(mm.paper_flops == 2 * 3 * run.nnz * 16 for mm in m.modes)
+
+
+def test_engine_hit_rates_within_tolerance(tiny_result):
+    (run,) = tiny_result.runs
+    assert run.hit_rates  # every caching level of every stack was priced
+    assert {h.capacity_bytes for h in run.hit_rates} == {
+        786432,  # FPGA cache subsystem (E- and O-SRAM share the geometry)
+        54 * 2**20,  # pSRAM array
+        128 * 2**20,  # TPU VMEM
+    }
+    assert tiny_result.all_within_tol
+    for h in run.hit_rates:
+        assert h.max_abs_err <= CHE_VS_TRACE_TOL
+
+
+def test_engine_artifact_payload_shape(tiny_result):
+    payload = tiny_result.to_json_dict()
+    assert payload["benchmark"] == "experiments"
+    assert payload["che_tolerance"] == CHE_VS_TRACE_TOL
+    key = f"{tiny_result.runs[0].tensor}/ref"
+    assert key in payload["speedup_table"]
+    assert payload["speedup_table"][key]["priced"] > 1.0
+    assert 2.8 < payload["energy_table"][key]["priced"] < 8.1
+    # round-trips through JSON
+    import json
+
+    parsed = json.loads(json.dumps(payload))
+    run = parsed["runs"][0]
+    assert run["measured"]["modes"][0]["steady_s"] > 0
+    assert run["hit_rates"][0]["within_tol"] is True
+    # and renders as a report
+    from repro.perf.report import experiments_report_md
+
+    md = experiments_report_md(parsed)
+    assert "Measured CP-ALS runs" in md and "ALL WITHIN TOLERANCE" in md
+
+
+def test_measured_pricing_vs_che_pricing_differ_only_via_hit_rates(tiny_result):
+    """Injecting measured hit rates must leave the rest of the pricing
+    identical: re-pricing with the SAME rates through the scalar hierarchy
+    path reproduces priced_mode_s exactly."""
+    from repro.core.accelerator import PAPER_ACCEL
+    from repro.core.hierarchy import fpga_hierarchy, hierarchy_mode_time
+    from repro.core.memory_tech import E_SRAM
+
+    (run,) = tiny_result.runs
+    tensor = make_frostt_like("NELL-2", scale=1e-4, seed=0)
+    ft = scaled_characteristics("NELL-2", tensor, scale=1e-4)
+    cache = ExecutedTraceHitRates(tensor, "ref")
+    hier = fpga_hierarchy(E_SRAM, accel=PAPER_ACCEL)
+    cell = run.tech("E-SRAM")
+    for mode in range(ft.nmodes):
+        rates = cache.get(ft, mode, hier.hit_geometries()[0], 16)
+        mt = hierarchy_mode_time(hier, ft, mode, rank=16, hit_rates=rates)
+        assert mt.seconds == cell.priced_mode_s[mode]
+
+
+def test_measure_cp_als_pallas_agrees_with_ref_fit():
+    t = make_frostt_like("NELL-2", scale=5e-5, seed=1)
+    ref = measure_cp_als(t, name="tiny", impl="ref", n_iters=2, cost_analysis=False)
+    pal = measure_cp_als(t, name="tiny", impl="pallas", n_iters=2, cost_analysis=False)
+    assert abs(ref.fit - pal.fit) < 1e-3

@@ -5,14 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# hypothesis is optional (requirements-dev.txt): only the property sweep
-# needs it, so a fresh clone without it still runs the rest of this module.
-try:
-    from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+# Real hypothesis when installed (requirements-dev.txt; CI), else a
+# deterministic fallback sampler — the sweep runs either way.
+from property_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -53,30 +48,22 @@ def test_flash_uneven_seq_padding():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
-if HAVE_HYPOTHESIS:
-
-    @settings(max_examples=8, deadline=None)
-    @given(
-        s=st.sampled_from([64, 128, 192]),
-        h=st.sampled_from([1, 2]),
-        d=st.sampled_from([16, 64]),
-        causal=st.booleans(),
-        seed=st.integers(0, 1000),
-    )
-    def test_flash_property_sweep(s, h, d, causal, seed):
-        q, k, v = _mk(1, s, h, h, d, seed=seed)
-        got = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64, interpret=True)
-        qf = q.transpose(0, 2, 1, 3).reshape(h, s, d)
-        kf = k.transpose(0, 2, 1, 3).reshape(h, s, d)
-        vf = v.transpose(0, 2, 1, 3).reshape(h, s, d)
-        want = attention_ref(qf, kf, vf, causal=causal).reshape(1, h, s, d).transpose(0, 2, 1, 3)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
-
-else:
-
-    @pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
-    def test_flash_property_sweep():
-        pass
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    h=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_flash_property_sweep(s, h, d, causal, seed):
+    q, k, v = _mk(1, s, h, h, d, seed=seed)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(h, s, d)
+    want = attention_ref(qf, kf, vf, causal=causal).reshape(1, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
 def test_flash_bf16():

@@ -5,14 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-# hypothesis is optional (requirements-dev.txt): only the property sweep
-# needs it, so a fresh clone without it still runs the rest of this module.
-try:
-    from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
+# Real hypothesis when installed (requirements-dev.txt; CI), else a
+# deterministic fallback sampler — the sweep runs either way.
+from property_compat import given, settings, st
 
 from repro.core.mttkrp import dense_mttkrp_oracle, mttkrp_ref
 from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
@@ -93,32 +88,79 @@ def test_empty_blocks_are_zeroed():
     assert np.all(np.asarray(got)[100:200] == 0.0)
 
 
-if HAVE_HYPOTHESIS:
+@settings(max_examples=25, deadline=None)
+@given(
+    i0=st.integers(3, 60),
+    i1=st.integers(3, 40),
+    i2=st.integers(3, 40),
+    rank=st.sampled_from([1, 3, 8, 16, 24]),
+    nnz=st.integers(1, 400),
+    tile=st.sampled_from([8, 32, 128]),
+    rpb=st.sampled_from([8, 32, 128]),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_pallas_property_sweep(i0, i1, i2, rank, nnz, tile, rpb, mode, seed):
+    t = random_sparse_tensor((i0, i1, i2), nnz=nnz, seed=seed)
+    facs = _factors(t.shape, rank, seed=seed % 97)
+    got = mttkrp_pallas(t, facs, mode, tile_nnz=tile, rows_per_block=rpb, interpret=True)
+    want = mttkrp_ref(t, facs, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
-    @settings(max_examples=25, deadline=None)
-    @given(
-        i0=st.integers(3, 60),
-        i1=st.integers(3, 40),
-        i2=st.integers(3, 40),
-        rank=st.sampled_from([1, 3, 8, 16, 24]),
-        nnz=st.integers(1, 400),
-        tile=st.sampled_from([8, 32, 128]),
-        rpb=st.sampled_from([8, 32, 128]),
-        mode=st.integers(0, 2),
-        seed=st.integers(0, 2**16),
+
+# --- edge cases every impl must agree on (sharded runs the same cases in
+# --- tests/test_distributed.py, which needs its 8-device subprocess) -------
+
+
+def _assert_pallas_matches_ref(t, rank, *, tile_nnz=256, rows_per_block=64, seed=0):
+    facs = _factors(t.shape, rank, seed=seed)
+    got = mttkrp_pallas(
+        t, facs, 0, tile_nnz=tile_nnz, rows_per_block=rows_per_block, interpret=True
     )
-    def test_pallas_property_sweep(i0, i1, i2, rank, nnz, tile, rpb, mode, seed):
-        t = random_sparse_tensor((i0, i1, i2), nnz=nnz, seed=seed)
-        facs = _factors(t.shape, rank, seed=seed % 97)
-        got = mttkrp_pallas(t, facs, mode, tile_nnz=tile, rows_per_block=rpb, interpret=True)
-        want = mttkrp_ref(t, facs, mode)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    want = mttkrp_ref(t, facs, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+    return np.asarray(got)
 
-else:
 
-    @pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")
-    def test_pallas_property_sweep():
-        pass
+def test_single_nonzero_tensor():
+    from repro.core.sparse_tensor import SparseTensor
+
+    t = SparseTensor(
+        np.array([[5, 2, 7]], np.int32), np.array([2.5], np.float32), (11, 6, 9)
+    )
+    got = _assert_pallas_matches_ref(t, rank=8)
+    # exactly one populated output row
+    assert (np.abs(got).sum(axis=1) > 0).sum() == 1
+
+
+def test_rank_one_padded_to_lane():
+    # rank 1 stresses the LANE padding (1 -> 128) end to end.
+    t = random_sparse_tensor((30, 20, 10), nnz=200, seed=21)
+    _assert_pallas_matches_ref(t, rank=1)
+
+
+def test_all_nonzeros_in_one_output_block():
+    # Every output row < rows_per_block: a single VMEM block accumulates all.
+    rng = np.random.default_rng(4)
+    from repro.core.sparse_tensor import SparseTensor
+
+    idx = np.stack(
+        [
+            rng.integers(0, 16, size=300),  # output rows all in block 0 (rpb=64)
+            rng.integers(0, 40, size=300),
+            rng.integers(0, 40, size=300),
+        ],
+        axis=1,
+    ).astype(np.int32)
+    t = SparseTensor(idx, rng.standard_normal(300).astype(np.float32), (256, 40, 40))
+    got = _assert_pallas_matches_ref(t, rank=16)
+    assert np.all(got[16:] == 0.0)
+
+
+def test_nnz_smaller_than_tile():
+    # 5 nonzeros, tile_nnz=256: one mostly-padding tile per touched block.
+    t = random_sparse_tensor((40, 30, 20), nnz=5, seed=13)
+    _assert_pallas_matches_ref(t, rank=16, tile_nnz=256, rows_per_block=64)
 
 
 def test_plan_properties():

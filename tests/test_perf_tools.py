@@ -75,14 +75,29 @@ def test_fast_benchmarks_produce_rows():
             assert isinstance(name, str)
 
 
+_SYNTH_CELL = {
+    "arch": "synthetic-arch",
+    "shape": "tiny",
+    "mesh": "16x16",
+    "status": "ok",
+    "roofline": {
+        "compute_s": 1.2e-3,
+        "memory_s": 2.5e-3,
+        "collective_s": 4.0e-4,
+        "dominant": "memory",
+        "useful_ratio": 0.8,
+        "mfu_roofline": 0.31,
+        "hbm_gb_per_chip": 3.4,
+    },
+}
+
+
 def test_roofline_report_builds():
     from repro.perf.report import dryrun_summary_md, load_cells, roofline_table_md
 
-    cells = load_cells("results/dryrun")
-    if not cells:
-        import pytest
-
-        pytest.skip("no dry-run artifacts yet")
+    # Real dry-run artifacts when present, else a synthetic cell — the
+    # renderer is exercised either way instead of skipping.
+    cells = load_cells("results/dryrun") or [_SYNTH_CELL]
     md = roofline_table_md(cells)
-    assert "| arch |" in md
+    assert "| arch |" in md and "**" in md
     assert dryrun_summary_md(cells)
