@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments
+.PHONY: test bench-smoke docs-check check experiments reorder
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,6 +18,11 @@ bench-smoke:
 # reconciled with the analytic model -> BENCH_experiments.json.
 experiments:
 	$(PY) scripts/run_experiments.py --out BENCH_experiments.json
+
+# Ordering sweep: every reordering strategy's executed trace priced on
+# all four memory stacks -> BENCH_reorder.json (repro.reorder).
+reorder:
+	$(PY) scripts/run_reorder.py --out BENCH_reorder.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

@@ -74,9 +74,14 @@ class CacheStats:
         """Hit rate with the cold start excluded: hits over the accesses
         that COULD have hit (everything but first touches).  This is the
         steady-state quantity comparable to ``che_hit_rate`` (which models
-        an infinite trace and so never sees compulsory misses)."""
+        an infinite trace and so never sees compulsory misses).
+
+        Empty or all-cold-miss traces report 0.0: with zero warm accesses
+        there is no evidence of reuse, and the historical 1.0 silently
+        inflated the measured side of the reconciliation whenever a shard
+        or mode slice owned zero nonzeros (DESIGN.md §7)."""
         warm = self.accesses - self.cold_misses
-        return self.hits / warm if warm > 0 else 1.0
+        return self.hits / warm if warm > 0 else 0.0
 
     def merge(self, other: "CacheStats") -> "CacheStats":
         """Aggregate counts across independent cache units (per-PE / shard)."""
@@ -217,9 +222,21 @@ def che_hit_rate(
     never-evict regime (L ≤ T, e.g. a cache larger than the catalog) and
     the steady-state Che value as L → ∞, which is what makes a finite
     measured run comparable to the model at all.
+
+    ``num_rows`` may also be given as a popularity/row vector (only its
+    length is used, the catalog size); a LENGTH-1 array is treated as an
+    unsqueezed scalar (a dims slice), not as a one-row catalog.  An
+    EMPTY catalog — a shard or mode slice that owns zero nonzeros —
+    returns 0.0: nothing can ever hit.  (Historically an empty vector
+    crashed the solve with ``TypeError: only length-1 arrays ...`` and a
+    zero count reported a fictitious 1.0.)
     """
+    if np.ndim(num_rows) > 0:
+        arr = np.asarray(num_rows)
+        num_rows = int(arr.reshape(-1)[0]) if arr.size == 1 else int(arr.shape[0])
+    num_rows = int(num_rows)
     if num_rows <= 0:
-        return 1.0
+        return 0.0
     if trace_length is None and num_rows <= cache_rows:
         return 1.0
     n = min(num_rows, samples)

@@ -1,67 +1,14 @@
-"""Hypergraph locality reordering for sparse tensors (paper §IV-A).
+"""Backward-compat shim: the hypergraph reordering machinery grew into the
+ordering subsystem at ``repro.reorder`` (DESIGN.md §10).
 
-The paper models the tensor as a hypergraph and cites reordering (its
-refs [16,18]) as the lever for cache locality.  This module implements a
-degree-guided relabeling of mode indices: high-degree vertices (rows
-touched by many hyperedges) get the lowest new labels, concentrating hot
-rows in the same cache sets and shrinking effective reuse distances.  The
-benefit is MEASURED with the exact LRU simulator (core.cache_sim) in
-benchmarks/reordering.py — hit-rate uplift is the deliverable, mirroring
-how the paper's cache subsystem benefits from locality.
+``degree_reorder`` / ``reorder_tensor`` / ``mode_trace`` keep their
+historical signatures (``reorder_tensor`` defaults to the degree
+strategy; ``mode_trace`` accepts ``secondary_sort=``), but the
+implementations — plus the ``lex`` / ``secondary-sort`` / ``blocked``
+strategies, the plan integration and the ordering benchmark — live in
+``repro.reorder``.  Import from there in new code.
 """
 
-from __future__ import annotations
-
-import numpy as np
-
-from repro.core.sparse_tensor import SparseTensor
+from repro.reorder.strategies import degree_reorder, mode_trace, reorder_tensor
 
 __all__ = ["degree_reorder", "reorder_tensor", "mode_trace"]
-
-
-def degree_reorder(tensor: SparseTensor, mode: int) -> np.ndarray:
-    """Permutation for one mode: new_label = rank by descending degree.
-
-    Returns ``perm`` with perm[old_index] = new_index.
-    """
-    deg = np.bincount(tensor.indices[:, mode], minlength=tensor.shape[mode])
-    order = np.argsort(-deg, kind="stable")  # old indices by hotness
-    perm = np.empty_like(order)
-    perm[order] = np.arange(order.shape[0])
-    return perm
-
-
-def reorder_tensor(
-    tensor: SparseTensor, modes: list[int] | None = None
-) -> tuple[SparseTensor, list[np.ndarray]]:
-    """Relabel the given modes by degree.  Factor matrices of a CP model
-    must be row-permuted with the returned perms (perm maps old->new)."""
-    modes = list(range(tensor.nmodes)) if modes is None else modes
-    idx = tensor.indices.copy()
-    perms = []
-    for m in range(tensor.nmodes):
-        if m in modes:
-            p = degree_reorder(tensor, m)
-            idx[:, m] = p[tensor.indices[:, m]]
-            perms.append(p)
-        else:
-            perms.append(np.arange(tensor.shape[m]))
-    return SparseTensor(idx, tensor.values.copy(), tensor.shape), perms
-
-
-def mode_trace(
-    tensor: SparseTensor, out_mode: int, in_mode: int, *, secondary_sort: bool = False
-) -> np.ndarray:
-    """Factor-row access trace for ``in_mode`` under mode-ordered execution
-    of ``out_mode`` (Algorithm 1's traversal) — feed to cache_sim.
-
-    ``secondary_sort`` additionally orders hyperedges WITHIN each output
-    row by the input index (legal: the output row's accumulation is
-    order-independent) — consecutive repeats collapse reuse distance to 0,
-    the strongest locality lever available to the paper's memory mapping.
-    """
-    if secondary_sort:
-        order = np.lexsort((tensor.indices[:, in_mode], tensor.indices[:, out_mode]))
-    else:
-        order = np.argsort(tensor.indices[:, out_mode], kind="stable")
-    return tensor.indices[order, in_mode]

@@ -1,0 +1,44 @@
+"""Identity-anchored memoization helper.
+
+Host-side preprocessing (MTTKRP plans, ordered COO views) is memoized per
+source tensor, but tensors are unhashable numpy containers — so caches
+key on ``id()``.  A bare ``id()`` key is unsound: CPython recycles ids
+after GC (this caused intermittent stale-plan NaNs in the hypothesis
+sweep), so every entry pins a strong reference to its anchor object and
+lookups verify identity.  This class is the single home of that idiom,
+shared by the pallas plan cache (``repro.kernels.mttkrp.ops``) and the
+ref-dispatch ordered-view cache (``repro.core.mttkrp``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["IdentityKeyedCache"]
+
+
+class IdentityKeyedCache:
+    """Memo keyed by ``(id(anchor), *key)`` with identity verification.
+
+    Eviction is wholesale (clear at ``max_entries``) — entries are cheap
+    to rebuild and the cap only bounds memory of long-lived sessions.
+    """
+
+    def __init__(self, max_entries: int = 64) -> None:
+        self.max_entries = max_entries
+        self._store: dict[tuple, tuple[Any, Any]] = {}
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, anchor: Any, key: tuple) -> Any | None:
+        hit = self._store.get((id(anchor),) + key)
+        if hit is not None and hit[0] is anchor:
+            return hit[1]
+        return None
+
+    def put(self, anchor: Any, key: tuple, value: Any) -> Any:
+        if len(self._store) >= self.max_entries:
+            self._store.clear()
+        self._store[(id(anchor),) + key] = (anchor, value)
+        return value

@@ -22,9 +22,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.memo import IdentityKeyedCache
 from repro.core.sparse_tensor import SparseTensor
 
 __all__ = ["mttkrp_ref", "mttkrp", "khatri_rao"]
+
+# Ordered-view memo for the ref dispatch path: avoids re-running the
+# O(nnz log nnz) strategy sort on every CP-ALS call (repro.core.memo
+# documents the identity-anchoring soundness requirement).
+_ORDERED_CACHE = IdentityKeyedCache()
+
+
+def _ordered_ref_view(tensor: SparseTensor, mode: int, ordering: str) -> SparseTensor:
+    from repro.reorder import apply_nonzero_order, nonzero_order
+
+    view = _ORDERED_CACHE.get(tensor, (mode, ordering))
+    if view is None:
+        view = _ORDERED_CACHE.put(
+            tensor,
+            (mode, ordering),
+            apply_nonzero_order(tensor, nonzero_order(tensor, mode, ordering)),
+        )
+    return view
 
 
 def khatri_rao(mats: Sequence[jax.Array]) -> jax.Array:
@@ -79,19 +98,34 @@ def mttkrp(
     mode: int,
     *,
     impl: str = "ref",
+    ordering: str | None = None,
     **kwargs,
 ) -> jax.Array:
-    """Dispatching front-end. impl in {"ref", "pallas", "sharded"}."""
+    """Dispatching front-end. impl in {"ref", "pallas", "sharded"}.
+
+    ``ordering`` selects the nonzero execution order (repro.reorder,
+    DESIGN.md §10) for every impl: the ref path gathers in the permuted
+    COO order, the pallas path linearizes its plan with the strategy, the
+    sharded path lays out each shard's nonzeros in it.  Pure execution
+    orders only — mode relabelings (``reorder_tensor``) stay an explicit
+    caller-side transformation because they require factor-row perms.
+    """
     if impl == "ref":
+        if ordering is not None:
+            tensor = _ordered_ref_view(tensor, mode, ordering)
         return mttkrp_ref(tensor, factors, mode)
     if impl == "pallas":
         from repro.kernels.mttkrp import ops as mttkrp_ops
 
+        if ordering is not None:
+            kwargs["ordering"] = ordering
         return mttkrp_ops.mttkrp_pallas(tensor, factors, mode, **kwargs)
     if impl == "sharded":
         from repro.distributed import mttkrp_dist
 
-        return mttkrp_dist.mttkrp_sharded(tensor, factors, mode, **kwargs)
+        return mttkrp_dist.mttkrp_sharded(
+            tensor, factors, mode, ordering=ordering, **kwargs
+        )
     raise ValueError(f"unknown impl {impl!r}")
 
 

@@ -126,6 +126,10 @@ class MTTKRPPlan:
     sorted_values: np.ndarray
     local_row: np.ndarray
     tile_block: np.ndarray
+    # Nonzero-ordering strategy the linearization used (repro.reorder,
+    # DESIGN.md §10).  "lex" is the historical baseline: stable output-mode
+    # sort, original COO order within each output row.
+    ordering: str = "lex"
 
     @property
     def num_tiles(self) -> int:
@@ -166,11 +170,15 @@ def build_mttkrp_plan(
     *,
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str = "lex",
 ) -> MTTKRPPlan:
     """Linearize nonzeros for mode-ordered execution (paper Algorithm 1).
 
     Steps:
-      1. sort hyperedges by the output-mode vertex (stable);
+      1. order hyperedges by the selected ``ordering`` strategy
+         (repro.reorder, DESIGN.md §10) — every strategy keeps the output
+         mode as the primary key, so steps 2–4 see contiguous ascending
+         output blocks; ``"lex"`` is the historical stable output-mode sort;
       2. group by output block (``rows_per_block`` consecutive output rows);
       3. pad every block's nonzero count to a multiple of ``tile_nnz`` so no
          tile spans two output blocks (padding nonzeros carry value 0 and
@@ -183,7 +191,14 @@ def build_mttkrp_plan(
     i_out = tensor.shape[mode]
     num_blocks = max(1, -(-i_out // rows_per_block))
 
-    order = np.argsort(tensor.indices[:, mode], kind="stable")
+    if ordering == "lex":
+        order = np.argsort(tensor.indices[:, mode], kind="stable")
+    else:
+        from repro.reorder import nonzero_order  # circular-import guard
+
+        order = nonzero_order(
+            tensor, mode, ordering, rows_per_block=rows_per_block
+        )
     idx = tensor.indices[order].astype(np.int32)
     val = tensor.values[order]
 
@@ -229,6 +244,7 @@ def build_mttkrp_plan(
         sorted_values=out_val,
         local_row=out_local,
         tile_block=tile_block,
+        ordering=ordering,
     )
 
 
@@ -239,6 +255,9 @@ def random_sparse_tensor(
     seed: int = 0,
     dtype=np.float32,
     zipf_a: float | None = None,
+    correlation: float = 0.0,
+    n_clusters: int = 64,
+    shuffle: bool = False,
 ) -> SparseTensor:
     """Random COO tensor with optionally Zipf-skewed per-mode indices.
 
@@ -250,18 +269,52 @@ def random_sparse_tensor(
     solves, so executed-trace hit rates on these tensors are directly
     reconcilable with the Che approximation (DESIGN.md §7).
     Duplicate coordinates are coalesced.
+
+    ``correlation`` is the cross-mode hot-row coupling knob
+    (DESIGN.md §10): each nonzero draws a shared latent quantile, and
+    with probability ``correlation`` a mode's index quantile is sampled
+    from that latent's cluster band (one of ``n_clusters`` equal quantile
+    bands) instead of independently.  Rows that are hot together in one
+    mode are then hot together in every coupled mode — the structure
+    real FROSTT tensors have and the reordering strategies exploit
+    (repro.reorder).  Per-mode marginals are unchanged (the mixture is
+    still uniform over quantiles), so Che reconciliation still holds;
+    ``correlation=0`` (default) is draw-for-draw identical to the
+    historical generator.
+
+    ``shuffle`` randomizes the COO *storage* order after coalescing.
+    The coalescing step (``np.unique``) otherwise leaves the nonzeros
+    lexicographically sorted by coordinate — an artifact real FROSTT
+    dumps do not have, which silently made the ``lex`` baseline
+    coincide with ``secondary-sort`` for every mode (the within-row
+    order was already sorted).  Ordering benchmarks should shuffle.
     """
+    if not 0.0 <= correlation <= 1.0:
+        raise ValueError(f"correlation must be in [0, 1], got {correlation}")
     rng = np.random.default_rng(seed)
+    u_shared = rng.random(nnz) if correlation > 0.0 else None
     cols = []
     for dim in shape:
+        u = None
+        if u_shared is not None:
+            # Same cluster band as the shared latent (coarse quantile),
+            # fresh fine part — coupled draws agree on the hot/cold band,
+            # not the exact row.
+            band = np.floor(u_shared * n_clusters)
+            coupled = (band + rng.random(nnz)) / n_clusters
+            u = np.where(rng.random(nnz) < correlation, coupled, rng.random(nnz))
         if zipf_a is None:
-            cols.append(rng.integers(0, dim, size=nnz, dtype=np.int64))
+            if u is None:
+                cols.append(rng.integers(0, dim, size=nnz, dtype=np.int64))
+            else:
+                cols.append(np.minimum((u * dim).astype(np.int64), dim - 1))
         else:
             # Bounded Zipf (p ∝ rank^-a) via inverse-CDF sampling.
             p = np.arange(1, dim + 1, dtype=np.float64) ** (-float(zipf_a))
             cdf = np.cumsum(p)
             cdf /= cdf[-1]
-            ranks = np.searchsorted(cdf, rng.random(nnz), side="left")
+            draws = rng.random(nnz) if u is None else u
+            ranks = np.searchsorted(cdf, draws, side="left")
             perm = rng.permutation(dim)  # decorrelate rank from index value
             cols.append(perm[np.clip(ranks, 0, dim - 1)])
     idx = np.stack(cols, axis=1)
@@ -270,4 +323,7 @@ def random_sparse_tensor(
     _, first = np.unique(keys, return_index=True)
     idx = idx[first].astype(np.int32)
     vals = rng.standard_normal(idx.shape[0]).astype(dtype)
+    if shuffle:
+        perm = rng.permutation(idx.shape[0])
+        idx, vals = idx[perm], vals[perm]
     return SparseTensor(idx, vals, tuple(int(s) for s in shape))

@@ -41,13 +41,33 @@ def scaled_dims(name: str, scale: float) -> tuple[int, ...]:
     return tuple(max(4, int(round(d * per_mode))) for d in t.dims)
 
 
-def make_frostt_like(name: str, *, scale: float = 1e-3, seed: int = 0) -> SparseTensor:
+def make_frostt_like(
+    name: str,
+    *,
+    scale: float = 1e-3,
+    seed: int = 0,
+    correlation: float = 0.0,
+    n_clusters: int = 64,
+    shuffle: bool = False,
+) -> SparseTensor:
+    """Scaled FROSTT stand-in; ``correlation`` adds the cross-mode hot-row
+    coupling real FROSTT tensors exhibit (the structure nonzero-reordering
+    strategies exploit — repro.reorder, DESIGN.md §10).  The default 0.0
+    keeps the historical independent-mode draws bit-for-bit."""
     t = FROSTT_TENSORS[name]
     dims = scaled_dims(name, scale)
     nnz = max(64, int(t.nnz * scale))
     # Cap so tests stay fast even for PATENTS/REDDIT.
     nnz = min(nnz, 2_000_000)
-    return random_sparse_tensor(dims, nnz, seed=seed, zipf_a=t.zipf_alpha)
+    return random_sparse_tensor(
+        dims,
+        nnz,
+        seed=seed,
+        zipf_a=t.zipf_alpha,
+        correlation=correlation,
+        n_clusters=n_clusters,
+        shuffle=shuffle,
+    )
 
 
 def scaled_characteristics(

@@ -32,7 +32,7 @@ __all__ = ["mttkrp_sharded", "partition_by_output_rows"]
 
 
 def partition_by_output_rows(
-    tensor: SparseTensor, mode: int, n_shards: int
+    tensor: SparseTensor, mode: int, n_shards: int, *, order: np.ndarray | None = None
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Sort by output mode and pad-split nonzeros into equal shard blocks.
 
@@ -40,10 +40,17 @@ def partition_by_output_rows(
     row_start (n_shards,)) where shard i owns output rows
     [row_start[i], row_start[i+1]).  Shard boundaries are placed at row
     boundaries closest to an even nnz split (the paper's per-PE mapping).
+
+    ``order`` optionally injects a nonzero execution permutation
+    (``repro.reorder.nonzero_order``, DESIGN.md §10): shard MEMBERSHIP is
+    unchanged (it derives from row ownership), but each shard's nonzeros
+    are laid out — and hence gathered/executed — in the given order.  The
+    default (and ``order=lex``) reproduces the historical stable
+    output-mode sort exactly.
     """
-    order = np.argsort(tensor.indices[:, mode], kind="stable")
-    idx = tensor.indices[order]
-    val = tensor.values[order]
+    sort_order = np.argsort(tensor.indices[:, mode], kind="stable")
+    idx = tensor.indices[sort_order]
+    val = tensor.values[sort_order]
     nnz = idx.shape[0]
     rows = idx[:, mode]
     # even-nnz split points, snapped to row boundaries
@@ -59,13 +66,32 @@ def partition_by_output_rows(
     per = max(b - a for a, b in zip(bounds[:-1], bounds[1:]))
     out_idx = np.zeros((n_shards, per, tensor.nmodes), np.int32)
     out_val = np.zeros((n_shards, per), tensor.values.dtype)
+    shard_of = None
+    if order is not None:
+        shard_of = np.empty(nnz, np.int64)
+        for i, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
+            shard_of[sort_order[a:b]] = i
     for i, (a, b) in enumerate(zip(bounds[:-1], bounds[1:])):
-        out_idx[i, : b - a] = idx[a:b]
-        out_val[i, : b - a] = val[a:b]
+        n = b - a
+        if order is None:
+            if n:
+                out_idx[i, :n] = idx[a:b]
+                out_val[i, :n] = val[a:b]
+        else:
+            members = order[shard_of[order] == i]
+            if members.shape[0] != n:  # membership is order-independent
+                raise ValueError(
+                    f"order is not a permutation of this tensor's nonzeros: "
+                    f"shard {i} collected {members.shape[0]} members, "
+                    f"row ownership says {n}"
+                )
+            if n:
+                out_idx[i, :n] = tensor.indices[members]
+                out_val[i, :n] = tensor.values[members]
         row_start[i] = rows[a] if b > a else (rows[bounds[i] - 1] if a > 0 else 0)
-        # padding points at the shard's first row with value 0
-        if b > a:
-            out_idx[i, b - a :, mode] = rows[a]
+        # padding points at the shard's first (lowest) row with value 0
+        if n:
+            out_idx[i, n:, mode] = rows[a]
     return out_idx, out_val, row_start
 
 
@@ -77,8 +103,21 @@ def mttkrp_sharded(
     mesh: Mesh | None = None,
     axis: str = "data",
     scheme: str = "mode_ordered",
+    ordering: str | None = None,
+    rows_per_block: int = 256,
 ):
-    """Multi-device MTTKRP.  Returns (I_mode, R) on the host layout."""
+    """Multi-device MTTKRP.  Returns (I_mode, R) on the host layout.
+
+    ``ordering`` selects the within-shard nonzero execution order
+    (repro.reorder, DESIGN.md §10); shard ownership — row ranges under
+    ``mode_ordered``, equal blocks under ``allreduce`` — is a hardware
+    constraint and stays fixed.  ``None`` keeps the historical layouts
+    (raw order for ``allreduce``, stable output-mode sort otherwise).
+    ``rows_per_block`` is the blocked strategy's output-tile height; it
+    must match the value the trace capture uses
+    (``executed_input_traces``) or the measured order is not the
+    executed one.
+    """
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), (axis,))
     n = mesh.shape[axis]
@@ -86,14 +125,20 @@ def mttkrp_sharded(
     rank = factors[0].shape[1]
     facs = tuple(jnp.asarray(f) for f in factors)
 
+    ord_perm = None
+    if ordering is not None:
+        from repro.reorder import nonzero_order
+
+        ord_perm = nonzero_order(tensor, mode, ordering, rows_per_block=rows_per_block)
+
     if scheme == "allreduce":
         # block-shard nonzeros (pad to multiple of n)
         nnz = tensor.nnz
         per = -(-nnz // n)
         idx = np.zeros((n * per, tensor.nmodes), np.int32)
         val = np.zeros((n * per,), tensor.values.dtype)
-        idx[:nnz] = tensor.indices
-        val[:nnz] = tensor.values
+        idx[:nnz] = tensor.indices if ord_perm is None else tensor.indices[ord_perm]
+        val[:nnz] = tensor.values if ord_perm is None else tensor.values[ord_perm]
 
         def local(idx_l, val_l, *facs_l):
             acc = val_l.astype(jnp.float32)[:, None] * jnp.ones((1, rank), jnp.float32)
@@ -114,7 +159,7 @@ def mttkrp_sharded(
         return fn(jnp.asarray(idx), jnp.asarray(val), *facs)[:i_out].astype(facs[mode].dtype)
 
     # --- paper-faithful: output-row partitioning, no reduction --------------
-    idx_s, val_s, row_start = partition_by_output_rows(tensor, mode, n)
+    idx_s, val_s, row_start = partition_by_output_rows(tensor, mode, n, order=ord_perm)
     rows_per = -(-i_out // n)  # output block height per shard (padded)
 
     def local(idx_l, val_l, start_l, *facs_l):

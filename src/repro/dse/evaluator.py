@@ -107,17 +107,26 @@ def exact_hit_rates_for_geometry(
     mode: int,
     geometry: CacheGeometry,
     rank: int,
+    *,
+    ordering: str = "lex",
 ) -> tuple[float, ...]:
-    """Exact LRU hit rate per input factor over the mode-ordered trace.
+    """Exact LRU hit rate per input factor over the strategy-ordered trace.
 
-    Each input's row-index column of the (output-mode-sorted) nonzero
-    stream is simulated against its capacity share
-    (``geometry_sim_config``).
+    Each input's row-index column of the executed nonzero stream —
+    ``ordering``-linearized via ``repro.reorder.trace_view`` (for
+    ``"degree"`` this includes the hot-row relabeling, whose whole point
+    is the changed line/set mapping; DESIGN.md §10) — is simulated
+    against its capacity share (``geometry_sim_config``).
     """
     n_inputs = max(1, tensor.nmodes - 1)
     cfg, row_bytes = geometry_sim_config(geometry, rank, n_inputs=n_inputs)
 
-    ordered = tensor.mode_sorted(mode)
+    if ordering == "lex":
+        ordered = tensor.mode_sorted(mode)
+    else:
+        from repro.reorder import trace_view
+
+        ordered = trace_view(tensor, mode, ordering)
     hits = []
     for k in range(tensor.nmodes):
         if k == mode:
@@ -138,7 +147,10 @@ def exact_hit_rates(
 
 
 class HitRateCache:
-    """Memo for per-(CacheGeometry, tensor, mode, rank, method) hit rates.
+    """Memo for per-(CacheGeometry, tensor, mode, rank, method, ordering)
+    hit rates.  The ordering strategy (repro.reorder, DESIGN.md §10) only
+    distinguishes entries for the trace method — Che is order-blind, so
+    che entries normalize it away and one solve serves every strategy.
 
     The key is derived from ``CacheGeometry.key()`` — the single declared
     tuple of geometry fields; ``repro.core.hierarchy`` asserts at import
@@ -167,6 +179,7 @@ class HitRateCache:
         method: str = "che",
         trace: SparseTensor | None = None,
         trace_nnz_limit: int = TRACE_NNZ_LIMIT,
+        ordering: str = "lex",
     ) -> tuple[float, ...]:
         if method not in ("che", "trace", "auto"):
             raise ValueError(f"unknown hit-rate method {method!r}")
@@ -178,6 +191,10 @@ class HitRateCache:
                 method, trace = "trace", executable
             else:
                 method = "che"
+        if method == "che":
+            # Che's IRM is order-blind: every ordering strategy shares one
+            # solve (DESIGN.md §10), so normalize the memo key.
+            ordering = "lex"
         # For the trace method the tensor NAME is not enough: a shared
         # cache may see different trace tensors under the same name, so
         # fingerprint the trace object itself.
@@ -186,7 +203,7 @@ class HitRateCache:
             if (method == "trace" and trace is not None)
             else None
         )
-        key = (tensor.name, mode, rank, method, trace_key) + geometry.key()
+        key = (tensor.name, mode, rank, method, trace_key, ordering) + geometry.key()
         if key in self._store:
             self.hits += 1
             return self._store[key]
@@ -203,7 +220,9 @@ class HitRateCache:
                     f"no executable trace available for {tensor.name!r}; "
                     "pass trace_tensors= or use method='che'"
                 )
-            rates = exact_hit_rates_for_geometry(trace, mode, geometry, rank)
+            rates = exact_hit_rates_for_geometry(
+                trace, mode, geometry, rank, ordering=ordering
+            )
         self._store[key] = rates
         return rates
 
@@ -310,6 +329,7 @@ def _level_hits_for_point(
     method: str,
     trace: SparseTensor | None,
     trace_nnz_limit: int,
+    ordering: str = "lex",
 ) -> tuple[tuple[float, ...], ...]:
     """Per caching level, the memoized per-input hit rates."""
     out = []
@@ -326,6 +346,7 @@ def _level_hits_for_point(
                     method=method,
                     trace=trace,
                     trace_nnz_limit=trace_nnz_limit,
+                    ordering=ordering,
                 )
             )
     return tuple(out)
@@ -355,6 +376,16 @@ def evaluate_sweep(
     # NB: an empty HitRateCache is falsy (__len__), so test identity.
     cache = cache if cache is not None else HitRateCache()
     points = list(points)
+    # Che's IRM is order-blind: an ordering-axis sweep under the pure che
+    # method would report byte-identical cells per strategy — a table that
+    # reads as "reordering makes no difference".  Refuse it outright
+    # (auto keeps the documented per-tensor normalization: big tensors
+    # fall back to che and honestly show no delta there, DESIGN.md §10).
+    if hit_rate_method == "che" and len({p.ordering for p in points}) > 1:
+        raise ValueError(
+            "the ordering axis is invisible to the che hit-rate model; "
+            "sweep it with hit_rate_method='trace' or 'auto' (DESIGN.md §10)"
+        )
     hiers = [p.hierarchy() for p in points]
 
     groups: dict[tuple, list[int]] = {}
@@ -378,6 +409,7 @@ def evaluate_sweep(
                         method=hit_rate_method,
                         trace=trace_tensors.get(name),
                         trace_nnz_limit=trace_nnz_limit,
+                        ordering=points[idxs[j]].ordering,
                     )
                     for j in range(len(idxs))
                 ]

@@ -40,6 +40,7 @@ from repro.core.memory_tech import (
     TpuSpec,
 )
 from repro.data.frostt import PAPER_RANK
+from repro.reorder import ORDERINGS
 
 __all__ = [
     "SWEEP_AXES",
@@ -71,6 +72,10 @@ SWEEP_AXES: dict[str, tuple[str, str]] = {
     "dram_channels": ("system", "dram_channels"),
     "f_electrical": ("system", "f_electrical"),
     "rank": ("run", "rank"),
+    # Nonzero execution-order strategy (repro.reorder, DESIGN.md §10).
+    # Only the exact-trace hit-rate method can see it — Che's IRM is
+    # order-blind — so sweep it with hit_rate_method="trace"/"auto".
+    "ordering": ("run", "ordering"),
     # TPU-v5e-class memory-system axes (base_tech must be a TpuSpec).
     "hbm_bw": ("tpu", "hbm_bw"),
     "vmem_bytes": ("tpu", "vmem_bytes"),
@@ -94,6 +99,7 @@ DEFAULT_AXIS_VALUES: dict[str, tuple[Any, ...]] = {
     "dram_channels": (2, 4, 8),
     "f_electrical": (250e6, 500e6, 1e9),
     "rank": (8, 16, 32),
+    "ordering": ORDERINGS,
     "hbm_bw": (409.5e9, 819e9, 1638e9),
     "vmem_bytes": (64 * 2**20, 128 * 2**20, 256 * 2**20),
     "peak_flops": (98.5e12, 197e12, 394e12),
@@ -122,6 +128,9 @@ class SweepPoint:
     accel: AcceleratorConfig = PAPER_ACCEL
     system: SystemConstants = PAPER_SYSTEM
     rank: int = PAPER_RANK
+    # Nonzero execution-order strategy (repro.reorder, DESIGN.md §10);
+    # consumed by the evaluator's trace hit-rate method.
+    ordering: str = "lex"
     overrides: tuple[tuple[str, Any], ...] = ()
 
     def hierarchy(self) -> MemoryHierarchy:
@@ -142,6 +151,7 @@ class SweepSpec:
     base_accel: AcceleratorConfig = PAPER_ACCEL
     base_system: SystemConstants = PAPER_SYSTEM
     rank: int = PAPER_RANK
+    ordering: str = "lex"
 
     def __post_init__(self):
         unknown = [a for a in self.axes if a not in SWEEP_AXES]
@@ -165,6 +175,15 @@ class SweepSpec:
                     f"axis {axis!r} needs a TpuSpec base, got "
                     f"{type(self.base_tech).__name__}"
                 )
+        bad = [
+            v
+            for v in tuple(self.axes.get("ordering", ())) + (self.ordering,)
+            if v not in ORDERINGS
+        ]
+        if bad:
+            raise ValueError(
+                f"unknown ordering strategies {bad}; known: {list(ORDERINGS)}"
+            )
 
     def num_points(self) -> int:
         n = 1
@@ -177,7 +196,7 @@ class SweepSpec:
         out = []
         for combo in itertools.product(*(self.axes[a] for a in names)):
             overrides = tuple(zip(names, combo))
-            tech, accel, system, rank = self._apply(overrides)
+            tech, accel, system, rank, ordering = self._apply(overrides)
             label = f"{self.base_tech.name}[" + ",".join(
                 f"{a}={_fmt_value(v)}" for a, v in overrides
             ) + "]"
@@ -188,6 +207,7 @@ class SweepSpec:
                     accel=accel,
                     system=system,
                     rank=rank,
+                    ordering=ordering,
                     overrides=overrides,
                 )
             )
@@ -195,12 +215,13 @@ class SweepSpec:
 
     def _apply(
         self, overrides: tuple[tuple[str, Any], ...]
-    ) -> tuple[MemoryTechSpec | TpuSpec, AcceleratorConfig, SystemConstants, int]:
+    ) -> tuple[MemoryTechSpec | TpuSpec, AcceleratorConfig, SystemConstants, int, str]:
         tech_kw: dict[str, Any] = {}
         cache_kw: dict[str, Any] = {}
         accel_kw: dict[str, Any] = {}
         system_kw: dict[str, Any] = {}
         rank = self.rank
+        ordering = self.ordering
         for axis, value in overrides:
             layer, field = SWEEP_AXES[axis]
             if layer in ("tech", "tpu"):
@@ -211,7 +232,9 @@ class SweepSpec:
                 accel_kw[field] = value
             elif layer == "system":
                 system_kw[field] = value
-            else:  # run
+            elif field == "ordering":  # run layer
+                ordering = str(value)
+            else:  # run: rank
                 rank = int(value)
         tech = dataclasses.replace(self.base_tech, **tech_kw) if tech_kw else self.base_tech
         accel = self.base_accel
@@ -224,7 +247,7 @@ class SweepSpec:
             if system_kw
             else self.base_system
         )
-        return tech, accel, system, rank
+        return tech, accel, system, rank, ordering
 
 
 def paper_pair(

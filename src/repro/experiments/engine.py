@@ -49,6 +49,7 @@ from repro.experiments.measure import (
     MeasuredRun,
     measure_cp_als,
 )
+from repro.reorder import prepare_execution
 
 __all__ = [
     "ALL_TECHS",
@@ -85,6 +86,13 @@ class ExperimentSpec:
     seed: int = 0
     n_shards: int = 8
     scheme: str = "mode_ordered"  # sharded partitioning scheme
+    # Nonzero execution-order strategies to measure + price per run
+    # (repro.reorder, DESIGN.md §10).  ``None`` is the impl-native order
+    # (raw COO for ref, lex plan for pallas, mode-sorted shards) — the
+    # historical single-run behavior.  The degree strategy relabels the
+    # executed tensor engine-side (factors are re-initialized to the
+    # relabeled shapes; the fit metric is label-invariant).
+    orderings: tuple[str | None, ...] = (None,)
     cost_analysis: bool = True
 
     def to_dict(self) -> dict:
@@ -160,6 +168,14 @@ class RunResult:
     measured: MeasuredRun
     techs: tuple[TechReconciliation, ...]
     hit_rates: tuple[HitRateReconciliation, ...]
+    # Execution-order strategy of this run (repro.reorder, DESIGN.md §10);
+    # None = the impl-native order (the historical behavior).
+    ordering: str | None = None
+
+    @property
+    def key(self) -> str:
+        base = f"{self.tensor}/{self.impl}"
+        return base if self.ordering is None else f"{base}/{self.ordering}"
 
     @property
     def all_within_tol(self) -> bool:
@@ -179,6 +195,7 @@ class RunResult:
             "dims": list(self.dims),
             "nnz": self.nnz,
             "impl": self.impl,
+            "ordering": self.ordering,
             "measured": self.measured.to_dict(),
             "technologies": [t.to_dict() for t in self.techs],
             "hit_rates": [h.to_dict() for h in self.hit_rates],
@@ -197,22 +214,24 @@ class ExperimentResult:
         return all(r.all_within_tol for r in self.runs)
 
     def speedup_table(self) -> dict[str, dict[str, float]]:
-        """Per (tensor, impl): E-SRAM→O-SRAM speedup, trace- and Che-priced."""
+        """Per run (tensor/impl[/ordering]): E-SRAM→O-SRAM speedup, trace-
+        and Che-priced."""
         out: dict[str, dict[str, float]] = {}
         for r in self.runs:
             e, o = r.tech("E-SRAM"), r.tech("O-SRAM")
-            out[f"{r.tensor}/{r.impl}"] = {
+            out[r.key] = {
                 "priced": sum(e.priced_mode_s) / sum(o.priced_mode_s),
                 "modeled": sum(e.modeled_mode_s) / sum(o.modeled_mode_s),
             }
         return out
 
     def energy_table(self) -> dict[str, dict[str, float]]:
-        """Per (tensor, impl): E-SRAM→O-SRAM energy savings, both pricings."""
+        """Per run (tensor/impl[/ordering]): E-SRAM→O-SRAM energy savings,
+        both pricings."""
         out: dict[str, dict[str, float]] = {}
         for r in self.runs:
             e, o = r.tech("E-SRAM"), r.tech("O-SRAM")
-            out[f"{r.tensor}/{r.impl}"] = {
+            out[r.key] = {
                 "priced": e.priced_energy_j / o.priced_energy_j,
                 "modeled": e.modeled_energy_j / o.modeled_energy_j,
             }
@@ -239,9 +258,17 @@ def _shares(values: Sequence[float]) -> tuple[float, ...]:
     return tuple(v / total for v in values)
 
 
-def _measure(spec: ExperimentSpec, name: str, scale: float, impl: str, tensor, ft):
+def _measure(
+    spec: ExperimentSpec,
+    name: str,
+    scale: float,
+    impl: str,
+    tensor,
+    ft,
+    ordering: str | None,
+):
     if impl == "sharded":
-        return _measure_sharded_subprocess(spec, name, scale, ft.name)
+        return _measure_sharded_subprocess(spec, name, scale, ft.name, ordering)
     return measure_cp_als(
         tensor,
         name=ft.name,
@@ -249,19 +276,25 @@ def _measure(spec: ExperimentSpec, name: str, scale: float, impl: str, tensor, f
         n_iters=spec.n_iters,
         impl=impl,
         seed=spec.seed,
+        ordering=ordering,
         cost_analysis=spec.cost_analysis,
     )
 
 
 def _measure_sharded_subprocess(
-    spec: ExperimentSpec, name: str, scale: float, tensor_name: str
+    spec: ExperimentSpec,
+    name: str,
+    scale: float,
+    tensor_name: str,
+    ordering: str | None,
 ) -> MeasuredRun:
     """Run the sharded measurement under 8 forced host devices.
 
     XLA fixes the platform device count at first initialization, so the
     parent process (single-device, hosting ref/pallas) cannot flip it;
     the worker re-materializes the tensor deterministically from
-    (name, scale, seed) and reports the measured run as JSON.
+    (name, scale, seed) — re-applying the degree relabeling when the
+    ordering asks for it — and reports the measured run as JSON.
     """
     src_dir = Path(__file__).resolve().parents[2]
     payload = json.dumps(
@@ -273,6 +306,7 @@ def _measure_sharded_subprocess(
             "n_iters": spec.n_iters,
             "seed": spec.seed,
             "scheme": spec.scheme,
+            "ordering": ordering,
             "devices": spec.n_shards,
         }
     )
@@ -360,43 +394,54 @@ def run_experiments(spec: ExperimentSpec = ExperimentSpec()) -> ExperimentResult
                     }
                 )
                 continue
-            measured = _measure(spec, name, scale, impl, tensor, ft)
-            trace_cache = ExecutedTraceHitRates(
-                tensor, impl, scheme=spec.scheme, n_shards=spec.n_shards
-            )
-            priced = evaluate_sweep(points, tensors, cache=trace_cache)
-            techs = []
-            for tech in ALL_TECHS:
-                p_cell = priced.cell(tech.name, ft.name)
-                m_cell = modeled.cell(tech.name, ft.name)
-                meas_share = _shares(measured.steady_mode_s)
-                priced_share = _shares(p_cell.mode_seconds)
-                residuals = tuple(
-                    ms - ps for ms, ps in zip(meas_share, priced_share)
+            for ordering in spec.orderings:
+                # The degree strategy relabels the executed tensor once,
+                # globally (DESIGN.md §10).  The dims/nnz characteristics
+                # — everything the analytic model reads — are
+                # label-invariant.
+                exec_tensor, _perms = prepare_execution(tensor, ordering)
+                measured = _measure(spec, name, scale, impl, exec_tensor, ft, ordering)
+                trace_cache = ExecutedTraceHitRates(
+                    exec_tensor,
+                    impl,
+                    scheme=spec.scheme,
+                    n_shards=spec.n_shards,
+                    ordering=ordering,
                 )
-                techs.append(
-                    TechReconciliation(
-                        tech=tech.name,
-                        measured_mode_s=measured.steady_mode_s,
-                        priced_mode_s=p_cell.mode_seconds,
-                        modeled_mode_s=m_cell.mode_seconds,
-                        priced_energy_j=p_cell.energy_j,
-                        modeled_energy_j=m_cell.energy_j,
-                        share_residuals=residuals,
-                        max_share_residual=max(abs(r) for r in residuals),
+                priced = evaluate_sweep(points, tensors, cache=trace_cache)
+                techs = []
+                for tech in ALL_TECHS:
+                    p_cell = priced.cell(tech.name, ft.name)
+                    m_cell = modeled.cell(tech.name, ft.name)
+                    meas_share = _shares(measured.steady_mode_s)
+                    priced_share = _shares(p_cell.mode_seconds)
+                    residuals = tuple(
+                        ms - ps for ms, ps in zip(meas_share, priced_share)
+                    )
+                    techs.append(
+                        TechReconciliation(
+                            tech=tech.name,
+                            measured_mode_s=measured.steady_mode_s,
+                            priced_mode_s=p_cell.mode_seconds,
+                            modeled_mode_s=m_cell.mode_seconds,
+                            priced_energy_j=p_cell.energy_j,
+                            modeled_energy_j=m_cell.energy_j,
+                            share_residuals=residuals,
+                            max_share_residual=max(abs(r) for r in residuals),
+                        )
+                    )
+                runs.append(
+                    RunResult(
+                        frostt=name,
+                        scale=scale,
+                        tensor=ft.name,
+                        dims=tensor.shape,
+                        nnz=tensor.nnz,
+                        impl=impl,
+                        measured=measured,
+                        techs=tuple(techs),
+                        hit_rates=_reconcile_hit_rates(trace_cache, ft, spec.rank),
+                        ordering=ordering,
                     )
                 )
-            runs.append(
-                RunResult(
-                    frostt=name,
-                    scale=scale,
-                    tensor=ft.name,
-                    dims=tensor.shape,
-                    nnz=tensor.nnz,
-                    impl=impl,
-                    measured=measured,
-                    techs=tuple(techs),
-                    hit_rates=_reconcile_hit_rates(trace_cache, ft, spec.rank),
-                )
-            )
     return ExperimentResult(spec=spec, runs=runs, skipped=skipped)

@@ -150,6 +150,7 @@ def measure_cp_als(
     scheme: str = "mode_ordered",
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str | None = None,
     cost_analysis: bool = True,
 ) -> MeasuredRun:
     """Run CP-ALS with an instrumented MTTKRP and collect per-mode timings.
@@ -163,6 +164,13 @@ def measure_cp_als(
     implemented, reported as such.  The first call per mode additionally
     carries trace/compile cost and is separated out (``first_s``);
     ``steady_s`` is the median of the remaining calls.
+
+    ``ordering`` makes the impl execute the given strategy's nonzero
+    order (repro.reorder, DESIGN.md §10): the ref path gathers the
+    per-mode permuted streams, the pallas plans linearize with the
+    strategy, the sharded path lays each shard out in it.  ``None`` keeps
+    the impl-native order.  For the degree strategy, relabel the tensor
+    (and factors) first — the engine does.
     """
     import jax
     import jax.numpy as jnp
@@ -173,16 +181,38 @@ def measure_cp_als(
     idx = jnp.asarray(tensor.indices)
     vals = jnp.asarray(tensor.values)
     if impl == "ref":
+        if ordering is None:
 
-        def base(t, f, m):
-            return mttkrp_ref((idx, vals, t.shape), f, m)
+            def base(t, f, m):
+                return mttkrp_ref((idx, vals, t.shape), f, m)
+
+        else:
+            from repro.reorder import nonzero_order
+
+            per_mode = {}
+            for m in range(tensor.nmodes):
+                o = nonzero_order(
+                    tensor, m, ordering, rows_per_block=rows_per_block
+                )
+                per_mode[m] = (
+                    jnp.asarray(tensor.indices[o]),
+                    jnp.asarray(tensor.values[o]),
+                )
+
+            def base(t, f, m):
+                i_m, v_m = per_mode[m]
+                return mttkrp_ref((i_m, v_m, t.shape), f, m)
 
     elif impl == "pallas":
         from repro.kernels.mttkrp.ops import mttkrp_pallas
 
         plans = {
             m: build_mttkrp_plan(
-                tensor, m, tile_nnz=tile_nnz, rows_per_block=rows_per_block
+                tensor,
+                m,
+                tile_nnz=tile_nnz,
+                rows_per_block=rows_per_block,
+                ordering=ordering if ordering is not None else "lex",
             )
             for m in range(tensor.nmodes)
         }
@@ -194,7 +224,10 @@ def measure_cp_als(
         from repro.distributed.mttkrp_dist import mttkrp_sharded
 
         def base(t, f, m):
-            return mttkrp_sharded(t, f, m, scheme=scheme)
+            return mttkrp_sharded(
+                t, f, m, scheme=scheme, ordering=ordering,
+                rows_per_block=rows_per_block,
+            )
 
     else:
         raise ValueError(f"unknown impl {impl!r}")
@@ -258,6 +291,7 @@ def executed_input_traces(
     n_shards: int = 8,
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str | None = None,
 ) -> dict[int, list[np.ndarray]]:
     """Per input factor ``k``, the row-index streams ``impl`` accesses.
 
@@ -272,37 +306,58 @@ def executed_input_traces(
     would inflate the measured reuse of exactly the streams the
     reconciliation is trying to compare against the model.
 
+    ``ordering`` selects an explicit execution-order strategy
+    (repro.reorder, DESIGN.md §10) instead of the impl-native defaults
+    above: the ref stream follows the strategy permutation, the pallas
+    plan linearizes with it, each shard lays its nonzeros out in it.
+    Mode *relabeling* (the degree strategy's other half) is the caller's
+    job — pass the already-relabeled tensor, as the experiment engine
+    does.
+
     The ordering work (plan build / shard partitioning, O(nnz log nnz))
     happens once per (impl, mode) here — callers needing several cache
     geometries reuse the result.
     """
     inputs = [k for k in range(tensor.nmodes) if k != mode]
+    ord_perm = None
+    if ordering is not None:
+        from repro.reorder import nonzero_order
+
+        ord_perm = nonzero_order(
+            tensor, mode, ordering, rows_per_block=rows_per_block
+        )
     if impl == "ref":
+        if ord_perm is not None:
+            return {k: [tensor.indices[ord_perm, k]] for k in inputs}
         return {k: [tensor.indices[:, k]] for k in inputs}
     if impl == "pallas":
         plan = build_mttkrp_plan(
-            tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block
+            tensor,
+            mode,
+            tile_nnz=tile_nnz,
+            rows_per_block=rows_per_block,
+            ordering=ordering if ordering is not None else "lex",
         )
         return {
             k: [plan.executed_row_trace(k, include_padding=False)] for k in inputs
         }
     if impl == "sharded":
         if scheme == "allreduce":
-            # Raw-order nonzeros block-sharded over the data axis: the
-            # same equal-height blocks mttkrp_sharded pads to (last shard
-            # short of padding).
+            # Raw-order (or strategy-ordered) nonzeros block-sharded over
+            # the data axis: the same equal-height blocks mttkrp_sharded
+            # pads to (last shard short of padding).
+            idx = tensor.indices if ord_perm is None else tensor.indices[ord_perm]
             per = -(-tensor.nnz // n_shards)
             bounds = [min(i * per, tensor.nnz) for i in range(n_shards + 1)]
             return {
-                k: [
-                    tensor.indices[a:b, k]
-                    for a, b in zip(bounds[:-1], bounds[1:])
-                ]
+                k: [idx[a:b, k] for a, b in zip(bounds[:-1], bounds[1:])]
                 for k in inputs
             }
         from repro.distributed.mttkrp_dist import partition_by_output_rows
 
-        idx_s, val_s, _row_start = partition_by_output_rows(tensor, mode, n_shards)
+        idx_s, val_s, _row_start = partition_by_output_rows(
+            tensor, mode, n_shards, order=ord_perm
+        )
         return {
             k: [idx_s[i, val_s[i] != 0, k] for i in range(n_shards)]
             for k in inputs
@@ -320,6 +375,7 @@ def executed_traces(
     n_shards: int = 8,
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str | None = None,
 ) -> list[np.ndarray]:
     """Single-input convenience wrapper around ``executed_input_traces``."""
     return executed_input_traces(
@@ -330,6 +386,7 @@ def executed_traces(
         n_shards=n_shards,
         tile_nnz=tile_nnz,
         rows_per_block=rows_per_block,
+        ordering=ordering,
     )[k]
 
 
@@ -344,6 +401,7 @@ def executed_trace_stats(
     n_shards: int = 8,
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str | None = None,
     input_traces: dict[int, list[np.ndarray]] | None = None,
 ) -> tuple[CacheStats, ...]:
     """Per input factor, exact LRU stats over the executed access order.
@@ -366,6 +424,7 @@ def executed_trace_stats(
             n_shards=n_shards,
             tile_nnz=tile_nnz,
             rows_per_block=rows_per_block,
+            ordering=ordering,
         )
     out = []
     for k in range(tensor.nmodes):
@@ -395,6 +454,7 @@ class ExecutedTraceHitRates(HitRateCache):
         n_shards: int = 8,
         tile_nnz: int = 256,
         rows_per_block: int = 256,
+        ordering: str | None = None,
     ) -> None:
         super().__init__()
         self.tensor = tensor
@@ -403,6 +463,12 @@ class ExecutedTraceHitRates(HitRateCache):
         self.n_shards = n_shards
         self.tile_nnz = tile_nnz
         self.rows_per_block = rows_per_block
+        # Execution-order strategy of the run this cache answers from
+        # (repro.reorder, DESIGN.md §10); None = the impl-native order.
+        # For the degree strategy pass the RELABELED tensor — relabeling
+        # needs factor perms, so it happens engine-side.
+        self.ordering = ordering
+        self._point_orderings: set[str] = set()
         self.stats: dict[tuple, tuple[CacheStats, ...]] = {}
         self.geometries: dict[tuple, tuple[CacheGeometry, int]] = {}
         # Executed order depends only on the mode: build the plan /
@@ -419,6 +485,7 @@ class ExecutedTraceHitRates(HitRateCache):
                 n_shards=self.n_shards,
                 tile_nnz=self.tile_nnz,
                 rows_per_block=self.rows_per_block,
+                ordering=self.ordering,
             )
         return self._input_traces[mode]
 
@@ -428,8 +495,22 @@ class ExecutedTraceHitRates(HitRateCache):
         mode: int,
         geometry: CacheGeometry,
         rank: int,
+        *,
+        ordering: str = "lex",
         **_ignored,
     ) -> tuple[float, ...]:
+        # This cache answers from ONE executed run; a per-point `ordering`
+        # cannot change the answer.  A sweep that varies the ordering axis
+        # against a fixed-trace cache would silently report zero deltas,
+        # so heterogeneous point orderings are an error (DESIGN.md §10).
+        self._point_orderings.add(ordering)
+        if len(self._point_orderings) > 1:
+            raise ValueError(
+                "ExecutedTraceHitRates answers from one executed run "
+                f"(ordering={self.ordering!r}); it cannot differentiate the "
+                f"sweep's ordering axis {sorted(self._point_orderings)} — "
+                "build one cache per strategy (repro.reorder.bench does)"
+            )
         if tuple(tensor.dims) != tuple(self.tensor.shape):
             raise ValueError(
                 f"characteristics {tensor.name!r} (dims {tensor.dims}) do not "

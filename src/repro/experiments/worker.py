@@ -35,6 +35,12 @@ def main() -> int:
     tensor = make_frostt_like(
         payload["name"], scale=payload["scale"], seed=payload["seed"]
     )
+    ordering = payload.get("ordering")
+    # Deterministic re-application of the engine-side degree relabeling
+    # (degree_reorder is a pure function of the tensor).
+    from repro.reorder import prepare_execution
+
+    tensor, _ = prepare_execution(tensor, ordering)
     run = measure_cp_als(
         tensor,
         name=payload["tensor_name"],
@@ -43,6 +49,7 @@ def main() -> int:
         impl="sharded",
         seed=payload["seed"],
         scheme=payload.get("scheme", "mode_ordered"),
+        ordering=ordering,
         # cost_analysis lowers the ref closure as a stand-in; the sharded
         # shard_map path is traced eagerly and has no single compiled HLO.
         cost_analysis=False,

@@ -16,15 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.memo import IdentityKeyedCache
 from repro.core.sparse_tensor import MTTKRPPlan, SparseTensor, build_mttkrp_plan
 from repro.kernels.mttkrp.kernel import LANE, mttkrp_pallas_call
 
-# Plan cache: keyed by id() BUT each entry holds a strong reference to its
-# tensor and verifies identity on lookup — a bare id() key is unsound
-# because CPython recycles ids after GC (caused intermittent stale-plan
-# NaNs in the hypothesis sweep).
-_PLAN_CACHE: dict[tuple[int, int, int, int], tuple[SparseTensor, MTTKRPPlan]] = {}
-_PLAN_CACHE_MAX = 64
+# Plan memo per source tensor (repro.core.memo documents the
+# identity-anchoring soundness requirement — a bare id() key caused
+# intermittent stale-plan NaNs in the hypothesis sweep).
+_PLAN_CACHE = IdentityKeyedCache()
 
 
 def _default_interpret() -> bool:
@@ -32,18 +31,27 @@ def _default_interpret() -> bool:
 
 
 def get_plan(
-    tensor: SparseTensor, mode: int, *, tile_nnz: int = 256, rows_per_block: int = 256
+    tensor: SparseTensor,
+    mode: int,
+    *,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    ordering: str = "lex",
 ) -> MTTKRPPlan:
-    key = (id(tensor), mode, tile_nnz, rows_per_block)
-    hit = _PLAN_CACHE.get(key)
-    if hit is not None and hit[0] is tensor:
-        return hit[1]
-    plan = build_mttkrp_plan(
-        tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block
-    )
-    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
-        _PLAN_CACHE.clear()
-    _PLAN_CACHE[key] = (tensor, plan)
+    key = (mode, tile_nnz, rows_per_block, ordering)
+    plan = _PLAN_CACHE.get(tensor, key)
+    if plan is None:
+        plan = _PLAN_CACHE.put(
+            tensor,
+            key,
+            build_mttkrp_plan(
+                tensor,
+                mode,
+                tile_nnz=tile_nnz,
+                rows_per_block=rows_per_block,
+                ordering=ordering,
+            ),
+        )
     return plan
 
 
@@ -55,11 +63,24 @@ def mttkrp_pallas(
     plan: MTTKRPPlan | None = None,
     tile_nnz: int = 256,
     rows_per_block: int = 256,
+    ordering: str = "lex",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """MTTKRP for ``mode`` via the Pallas kernel.  Returns (I_mode, R)."""
+    """MTTKRP for ``mode`` via the Pallas kernel.  Returns (I_mode, R).
+
+    ``ordering`` selects the plan's nonzero execution order (repro.reorder,
+    DESIGN.md §10); the kernel accumulates per output block, so any
+    block-contiguous order is legal and the result is unchanged up to
+    float summation order.
+    """
     if plan is None:
-        plan = get_plan(tensor, mode, tile_nnz=tile_nnz, rows_per_block=rows_per_block)
+        plan = get_plan(
+            tensor,
+            mode,
+            tile_nnz=tile_nnz,
+            rows_per_block=rows_per_block,
+            ordering=ordering,
+        )
     if interpret is None:
         interpret = _default_interpret()
 

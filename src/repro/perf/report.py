@@ -20,6 +20,7 @@ __all__ = [
     "sweep_table_md",
     "sweep_table_json",
     "experiments_report_md",
+    "reorder_report_md",
 ]
 
 
@@ -117,6 +118,7 @@ def experiments_report_md(payload: dict) -> str:
     """
     lines: list[str] = []
 
+    with_ordering = any(r.get("ordering") for r in payload["runs"])
     measured_rows = []
     for r in payload["runs"]:
         m = r["measured"]
@@ -124,6 +126,7 @@ def experiments_report_md(payload: dict) -> str:
             {
                 "tensor": r["tensor"],
                 "impl": r["impl"],
+                **({"ordering": r.get("ordering") or "native"} if with_ordering else {}),
                 "nnz": r["nnz"],
                 "iters": m["iters"],
                 "fit": m["fit"],
@@ -143,6 +146,11 @@ def experiments_report_md(payload: dict) -> str:
                 {
                     "tensor": r["tensor"],
                     "impl": r["impl"],
+                    **(
+                        {"ordering": r.get("ordering") or "native"}
+                        if with_ordering
+                        else {}
+                    ),
                     "tech": t["tech"],
                     "priced_s": sum(t["priced_mode_s"]),
                     "modeled_s": sum(t["modeled_mode_s"]),
@@ -185,6 +193,37 @@ def experiments_report_md(payload: dict) -> str:
         lines.append("\n## Skipped cells\n")
         for s in payload["skipped"]:
             lines.append(f"- {s['tensor']} × {s['impl']}: {s['reason']}")
+    return "\n".join(lines)
+
+
+def reorder_report_md(payload: dict) -> str:
+    """Human-readable report for a ``BENCH_reorder.json`` payload
+    (repro.reorder.bench, DESIGN.md §10): per-(tensor, strategy, stack)
+    pricing with hit-rate/energy deltas vs the lex baseline, plus the
+    acceptance-gate verdict."""
+    lines: list[str] = []
+    lines.append("## Ordering sweep (executed-trace pricing per strategy)\n")
+    cols = [
+        "tensor",
+        "strategy",
+        "stack",
+        "mean_hit_rate",
+        "d_hit_vs_lex",
+        "seconds",
+        "speedup_vs_lex",
+        "energy_j",
+        "d_energy_vs_lex",
+    ]
+    lines.append(sweep_table_md(payload["runs"], columns=cols))
+
+    acc = payload["acceptance"]
+    lines.append(
+        f"\n## Acceptance (non-lex beats lex on {' and '.join(acc['stacks'])})\n"
+    )
+    for name, rec in acc["tensors"].items():
+        verdict = ", ".join(rec["winners"]) if rec["winners"] else "NONE"
+        lines.append(f"- {name}: winning strategies: {verdict}")
+    lines.append(f"- overall: {'OK' if acc['ok'] else 'FAIL'}")
     return "\n".join(lines)
 
 

@@ -1,0 +1,47 @@
+"""Nonzero-ordering subsystem: the scheduling axis of spMTTKRP (DESIGN.md §10).
+
+The paper attributes its cache hit rates to mode-ordered traversal of the
+tensor hypergraph (§IV-A); its companion work on programmable memory
+controllers (arXiv 2207.08298) shows that *dynamic tensor remapping* —
+choosing the nonzero execution order per output mode — is the single
+biggest locality lever for spMTTKRP, and the photonic follow-up
+(arXiv 2503.18206) inherits whatever ordering the schedule picks.  This
+package makes that choice a first-class, sweepable axis:
+
+  * ``repro.reorder.strategies`` — the ordering strategies themselves
+    (``lex`` / ``degree`` / ``secondary-sort`` / ``blocked``), as nonzero
+    execution permutations (``nonzero_order``) and mode relabelings
+    (``reorder_tensor``);
+  * ``repro.reorder.bench``      — the ordering sweep that prices every
+    strategy's executed trace on all four memory stacks and emits the
+    ``BENCH_reorder.json`` artifact (``make reorder``).
+
+The strategies thread through ``build_mttkrp_plan(ordering=...)`` so the
+ref / pallas / sharded impls *execute* the chosen order, through the DSE
+evaluator as a sweep axis (hit-rate memo keyed on strategy), and through
+the experiment engine so measured CP-ALS runs are priced per ordering.
+"""
+
+from repro.reorder.strategies import (
+    DEFAULT_BLOCK_ROWS,
+    ORDERINGS,
+    apply_nonzero_order,
+    degree_reorder,
+    mode_trace,
+    nonzero_order,
+    prepare_execution,
+    reorder_tensor,
+    trace_view,
+)
+
+__all__ = [
+    "DEFAULT_BLOCK_ROWS",
+    "ORDERINGS",
+    "apply_nonzero_order",
+    "degree_reorder",
+    "mode_trace",
+    "nonzero_order",
+    "prepare_execution",
+    "reorder_tensor",
+    "trace_view",
+]

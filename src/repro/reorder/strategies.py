@@ -1,0 +1,246 @@
+"""Ordering strategies: nonzero execution orders + mode relabelings.
+
+Two orthogonal transformations compose into an ordering strategy
+(DESIGN.md §10):
+
+  * a **relabeling** of mode indices (``reorder_tensor``) — changes which
+    cache line/set a factor row lands on; CP factors must be row-permuted
+    with the returned perms, so it is applied once, globally, by the
+    caller (the experiment engine, the reorder benchmark);
+  * an **execution permutation** of the nonzeros for one output mode
+    (``nonzero_order``) — changes reuse distances only; it is always
+    result-preserving (the output row's accumulation is order-independent
+    up to float summation order) and needs no factor surgery, so it can
+    be threaded straight through ``build_mttkrp_plan`` and the impls.
+
+Strategies (all keep the output mode as the primary sort key, so every
+order is a valid Algorithm-1 linearization and plan-compatible):
+
+  ``lex``            the paper baseline: stable sort by output index,
+                     original COO order within each output row.
+  ``secondary-sort`` within each output row, nonzeros sorted by their
+                     input indices — consecutive repeats of an input row
+                     collapse its reuse distance to 0.
+  ``degree``         hot-row relabeling (absorbed from the former
+                     ``repro.core.hypergraph``): as a relabeling, rows are
+                     renamed by descending degree so hot rows share low
+                     labels; as an execution order, nonzeros within a row
+                     run hottest-input-first (on a relabeled tensor this
+                     coincides with ascending new labels).
+  ``blocked``        the PMC paper's remap unit: the output×input index
+                     space is tiled into cache-sized blocks and nonzeros
+                     execute block-by-block — primary key the output
+                     block (``rows_per_block``, the plan's unit), then
+                     each input's ``block_rows``-sized *degree-rank* band
+                     (hot-aware tiling: popularity rank, not raw label,
+                     defines the band), then the output row.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sparse_tensor import SparseTensor
+
+__all__ = [
+    "ORDERINGS",
+    "DEFAULT_BLOCK_ROWS",
+    "degree_reorder",
+    "reorder_tensor",
+    "prepare_execution",
+    "nonzero_order",
+    "apply_nonzero_order",
+    "trace_view",
+    "mode_trace",
+]
+
+ORDERINGS = ("lex", "degree", "secondary-sort", "blocked")
+
+# Rows per input-space tile of the "blocked" strategy: 128 factor rows of
+# the paper configuration (R=16 fp32 -> 64 B/row) are 8 KB — a cache-set
+# group, the granularity arXiv 2207.08298 remaps at.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def degree_reorder(tensor: SparseTensor, mode: int) -> np.ndarray:
+    """Permutation for one mode: new_label = rank by descending degree.
+
+    Returns ``perm`` with perm[old_index] = new_index; the hottest row
+    (touched by the most hyperedges) gets label 0.
+    """
+    deg = np.bincount(tensor.indices[:, mode], minlength=tensor.shape[mode])
+    order = np.argsort(-deg, kind="stable")  # old indices by hotness
+    perm = np.empty_like(order)
+    perm[order] = np.arange(order.shape[0])
+    return perm
+
+
+def reorder_tensor(
+    tensor: SparseTensor,
+    modes: list[int] | None = None,
+    *,
+    strategy: str = "degree",
+) -> tuple[SparseTensor, list[np.ndarray]]:
+    """Relabel the given modes per the strategy.  Factor matrices of a CP
+    model must be row-permuted with the returned perms (old -> new).
+
+    Only ``degree`` actually relabels; the other strategies are pure
+    execution orders (their relabeling is the identity), kept here so
+    strategy × impl differential tests exercise one uniform pipeline.
+    """
+    if strategy not in ORDERINGS:
+        raise ValueError(f"unknown ordering strategy {strategy!r}; known: {ORDERINGS}")
+    modes = list(range(tensor.nmodes)) if modes is None else list(modes)
+    idx = tensor.indices.copy()
+    perms = []
+    for m in range(tensor.nmodes):
+        if strategy == "degree" and m in modes:
+            p = degree_reorder(tensor, m)
+            idx[:, m] = p[tensor.indices[:, m]]
+            perms.append(p)
+        else:
+            perms.append(np.arange(tensor.shape[m]))
+    return SparseTensor(idx, tensor.values.copy(), tensor.shape), perms
+
+
+def prepare_execution(
+    tensor: SparseTensor, ordering: str | None
+) -> tuple[SparseTensor, list[np.ndarray] | None]:
+    """The tensor a run must EXECUTE for ``ordering`` + the factor perms.
+
+    The structural home of the degree strategy's precondition: its
+    relabeling half must be applied once, globally, before any
+    execution-order machinery (``mttkrp(ordering=...)``,
+    ``build_mttkrp_plan``, ``executed_input_traces``) sees the tensor —
+    otherwise the run measures different locality than the DSE trace
+    method (``trace_view``) prices for the same strategy name.  Returns
+    ``(tensor, None)`` unchanged for every pure execution-order strategy
+    (and for ``None`` = impl-native order); for ``degree`` returns the
+    relabeled tensor plus the old→new row perms the CP factors must be
+    permuted with.
+    """
+    if ordering == "degree":
+        relabeled, perms = reorder_tensor(tensor, strategy="degree")
+        return relabeled, perms
+    if ordering is not None and ordering not in ORDERINGS:
+        raise ValueError(f"unknown ordering strategy {ordering!r}; known: {ORDERINGS}")
+    return tensor, None
+
+
+def _input_modes(tensor: SparseTensor, mode: int, primary_input: int | None) -> list[int]:
+    inputs = [k for k in range(tensor.nmodes) if k != mode]
+    if primary_input is None:
+        return inputs
+    if primary_input not in inputs:
+        raise ValueError(
+            f"primary_input {primary_input} is not an input mode of output {mode}"
+        )
+    return [primary_input] + [k for k in inputs if k != primary_input]
+
+
+def nonzero_order(
+    tensor: SparseTensor,
+    mode: int,
+    strategy: str,
+    *,
+    rows_per_block: int = 256,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    primary_input: int | None = None,
+) -> np.ndarray:
+    """Execution permutation of the nonzeros for output ``mode``.
+
+    Returns ``order`` such that ``indices[order]`` is the strategy's
+    executed nonzero sequence.  Every strategy keeps the output mode as
+    the primary key (``blocked``: the output *block*), so the result is a
+    valid mode-ordered linearization for ``build_mttkrp_plan`` — blocks
+    stay contiguous and ascending.  ``primary_input`` promotes one input
+    mode to the most-significant secondary key (used by single-input
+    trace benchmarks); by default inputs rank in ascending mode order.
+    """
+    if not (0 <= mode < tensor.nmodes):
+        raise ValueError(f"mode {mode} out of range for {tensor.nmodes}-mode tensor")
+    idx = tensor.indices
+    out = idx[:, mode]
+    if strategy == "lex":
+        return np.argsort(out, kind="stable")
+    inputs = _input_modes(tensor, mode, primary_input)
+    # np.lexsort: LAST key is the primary; stable for ties.
+    if strategy == "secondary-sort":
+        keys = [idx[:, k] for k in reversed(inputs)] + [out]
+        return np.lexsort(tuple(keys))
+    if strategy == "degree":
+        ranks = [degree_reorder(tensor, k)[idx[:, k]] for k in inputs]
+        keys = list(reversed(ranks)) + [out]
+        return np.lexsort(tuple(keys))
+    if strategy == "blocked":
+        ranks = [degree_reorder(tensor, k)[idx[:, k]] for k in inputs]
+        bands = [r // block_rows for r in ranks]
+        keys = (
+            list(reversed(ranks))
+            + [out]
+            + list(reversed(bands))
+            + [out // rows_per_block]
+        )
+        return np.lexsort(tuple(keys))
+    raise ValueError(f"unknown ordering strategy {strategy!r}; known: {ORDERINGS}")
+
+
+def apply_nonzero_order(tensor: SparseTensor, order: np.ndarray) -> SparseTensor:
+    """The tensor with its nonzeros stored in execution order."""
+    return SparseTensor(tensor.indices[order], tensor.values[order], tensor.shape)
+
+
+def trace_view(
+    tensor: SparseTensor,
+    mode: int,
+    strategy: str,
+    *,
+    rows_per_block: int = 256,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> SparseTensor:
+    """The fully remapped COO view whose array order IS the executed order.
+
+    For ``degree`` this includes the relabeling (the strategy's whole
+    point is moving hot rows to low labels, which changes cache-set
+    mapping); for the pure execution-order strategies it is just the
+    permuted storage.  This is what the DSE trace method simulates when
+    an ordering is selected (repro.dse.evaluator).
+    """
+    if strategy == "degree":
+        tensor, _ = reorder_tensor(tensor, strategy="degree")
+    order = nonzero_order(
+        tensor, mode, strategy, rows_per_block=rows_per_block, block_rows=block_rows
+    )
+    return apply_nonzero_order(tensor, order)
+
+
+def mode_trace(
+    tensor: SparseTensor,
+    out_mode: int,
+    in_mode: int,
+    *,
+    strategy: str | None = None,
+    secondary_sort: bool = False,
+    rows_per_block: int = 256,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> np.ndarray:
+    """Factor-row access trace for ``in_mode`` under ``strategy``-ordered
+    execution of ``out_mode`` (Algorithm 1's traversal) — feed to
+    ``repro.core.cache_sim``.
+
+    The traced input mode is promoted to the primary secondary key
+    (``primary_input=in_mode``), so single-input benchmarks measure the
+    strategy's strongest form.  ``secondary_sort=True`` is the historical
+    ``repro.core.hypergraph`` spelling of ``strategy="secondary-sort"``.
+    """
+    if strategy is None:
+        strategy = "secondary-sort" if secondary_sort else "lex"
+    order = nonzero_order(
+        tensor,
+        out_mode,
+        strategy,
+        rows_per_block=rows_per_block,
+        block_rows=block_rows,
+        primary_input=None if strategy == "lex" else in_mode,
+    )
+    return tensor.indices[order, in_mode]

@@ -1,0 +1,458 @@
+"""repro.reorder: strategies, plan/impl threading, DSE axis, cache fixes.
+
+Covers ISSUE 4: the ordering subsystem (strategy validity, differential
+correctness per strategy × impl including partial-mode relabelings, the
+executed-trace hooks, the DSE sweep axis with strategy-keyed memoization,
+the correlated synthetic generator) and the two cache-model edge-case
+regressions (``che_hit_rate`` on an empty popularity vector,
+``CacheStats.warm_hit_rate`` on empty/all-cold traces).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.cache_sim import CacheConfig, CacheStats, che_hit_rate, simulate_trace
+from repro.core.hierarchy import CacheGeometry
+from repro.core.mttkrp import mttkrp, mttkrp_ref
+from repro.core.sparse_tensor import build_mttkrp_plan, random_sparse_tensor
+from repro.dse import SweepSpec, evaluate_sweep
+from repro.dse.evaluator import HitRateCache, exact_hit_rates_for_geometry
+from repro.dse.sweep import paper_pair
+from repro.reorder import (
+    ORDERINGS,
+    apply_nonzero_order,
+    degree_reorder,
+    mode_trace,
+    nonzero_order,
+    reorder_tensor,
+    trace_view,
+)
+
+FPGA_GEOM = CacheGeometry(capacity_bytes=786432, line_bytes=64, associativity=4)
+
+
+def _tiny(seed=2, shuffle=True, nnz=300, shape=(40, 25, 15)):
+    return random_sparse_tensor(
+        shape, nnz, seed=seed, zipf_a=0.8, correlation=0.6, shuffle=shuffle
+    )
+
+
+# --- cache-model edge-case regressions (ISSUE 4 bugfixes) -------------------
+
+
+def test_che_hit_rate_empty_popularity_vector_returns_zero():
+    # Historically: TypeError ("only length-1 arrays ...").  An empty
+    # vector / zero row count means a shard or mode slice owning zero
+    # nonzeros — nothing can ever hit.
+    assert che_hit_rate(np.array([]), 64) == 0.0
+    assert che_hit_rate(0, 64) == 0.0
+    assert che_hit_rate(0, 64, trace_length=100.0) == 0.0
+    # vector input: only the length (catalog size) is read
+    assert che_hit_rate(np.arange(100), 512) == 1.0
+    # ... except length-1 arrays, which are unsqueezed scalars, not
+    # one-row catalogs
+    assert che_hit_rate(np.array([10_000]), 512, zipf_alpha=0.9) == che_hit_rate(
+        10_000, 512, zipf_alpha=0.9
+    )
+    assert che_hit_rate(np.array([0]), 512) == 0.0
+    # steady-state scalar paths unchanged
+    assert che_hit_rate(100, 512, zipf_alpha=0.9) == 1.0
+    assert 0.0 < che_hit_rate(4096, 512, zipf_alpha=0.9) < 1.0
+
+
+def test_warm_hit_rate_empty_and_all_cold_traces_report_zero():
+    # simulate_trace([]) used to report warm_hit_rate 1.0 (and so did any
+    # all-cold-miss trace), silently inflating reconciliation residuals.
+    empty = simulate_trace(np.array([], dtype=np.int64), CacheConfig())
+    assert empty.accesses == 0
+    assert empty.hit_rate == 0.0
+    assert empty.warm_hit_rate == 0.0
+    all_cold = simulate_trace(np.array([1, 2, 3], dtype=np.int64), CacheConfig())
+    assert all_cold.hits == 0 and all_cold.cold_misses == 3
+    assert all_cold.warm_hit_rate == 0.0
+    assert CacheStats(accesses=0, hits=0).warm_hit_rate == 0.0
+    # warm traces are unchanged
+    warm = simulate_trace(
+        np.array([1, 2, 3, 1, 2, 3, 4, 1], dtype=np.int64),
+        CacheConfig(num_lines=64, line_bytes=64, associativity=4),
+    )
+    assert warm.warm_hit_rate == 1.0 and warm.hit_rate == 0.5
+
+
+# --- strategy validity ------------------------------------------------------
+
+
+def test_nonzero_order_is_mode_grouped_permutation():
+    t = _tiny()
+    for mode in range(t.nmodes):
+        for s in ORDERINGS:
+            o = nonzero_order(t, mode, s, rows_per_block=16)
+            assert sorted(o.tolist()) == list(range(t.nnz)), (mode, s)
+            blocks = t.indices[o, mode] // 16
+            assert (np.diff(blocks) >= 0).all(), (mode, s)  # plan-compatible
+
+
+def test_nonzero_order_lex_matches_stable_mode_sort():
+    t = _tiny(seed=5)
+    for mode in range(t.nmodes):
+        np.testing.assert_array_equal(
+            nonzero_order(t, mode, "lex"),
+            np.argsort(t.indices[:, mode], kind="stable"),
+        )
+
+
+def test_nonzero_order_rejects_unknown_strategy_and_bad_mode():
+    t = _tiny()
+    with pytest.raises(ValueError):
+        nonzero_order(t, 0, "hilbert")
+    with pytest.raises(ValueError):
+        nonzero_order(t, 3, "lex")
+    with pytest.raises(ValueError):
+        nonzero_order(t, 0, "secondary-sort", primary_input=0)
+
+
+def test_secondary_sort_groups_traced_input_within_rows():
+    t = _tiny(seed=3, shape=(10, 10, 10), nnz=200)
+    tr = mode_trace(t, 0, 1, strategy="secondary-sort")
+    out_sorted = t.indices[np.lexsort((t.indices[:, 1], t.indices[:, 0]))]
+    np.testing.assert_array_equal(tr, out_sorted[:, 1])
+    # legacy spelling agrees
+    np.testing.assert_array_equal(tr, mode_trace(t, 0, 1, secondary_sort=True))
+
+
+def test_reorder_tensor_identity_for_pure_execution_strategies():
+    t = _tiny()
+    for s in ("lex", "secondary-sort", "blocked"):
+        t2, perms = reorder_tensor(t, strategy=s)
+        np.testing.assert_array_equal(t2.indices, t.indices)
+        for m, p in enumerate(perms):
+            np.testing.assert_array_equal(p, np.arange(t.shape[m]))
+
+
+def test_degree_reorder_hottest_row_gets_label_zero():
+    t = _tiny(seed=1, shape=(50, 30, 20), nnz=400)
+    for m in range(3):
+        p = degree_reorder(t, m)
+        assert sorted(p.tolist()) == list(range(t.shape[m]))
+        deg = np.bincount(t.indices[:, m], minlength=t.shape[m])
+        assert p[np.argmax(deg)] == 0
+
+
+# --- differential correctness: strategy × impl ------------------------------
+
+
+@pytest.mark.parametrize("strategy", ORDERINGS)
+@pytest.mark.parametrize("impl", ["ref", "pallas", "sharded"])
+def test_strategy_impl_differential_vs_unreordered_oracle(strategy, impl):
+    """MTTKRP on the (relabeled) tensor with row-permuted factors must
+    match the unreordered oracle after inverse permutation, for every
+    strategy × impl, with the impl EXECUTING the strategy's order."""
+    t = _tiny()
+    t2, perms = reorder_tensor(t, strategy=strategy)
+    facs = [
+        jax.random.normal(jax.random.PRNGKey(i), (s, 8))
+        for i, s in enumerate(t.shape)
+    ]
+    facs2 = [np.asarray(f)[np.argsort(p)] for f, p in zip(facs, perms)]
+    kw = {"tile_nnz": 32, "rows_per_block": 16} if impl == "pallas" else {}
+    for mode in range(t.nmodes):
+        want = np.asarray(mttkrp_ref(t, facs, mode))
+        got = np.asarray(
+            mttkrp(
+                t2,
+                [jax.numpy.asarray(f) for f in facs2],
+                mode,
+                impl=impl,
+                ordering=strategy,
+                **kw,
+            )
+        )
+        # rows come back in NEW labels; map back to the oracle's space
+        np.testing.assert_allclose(got[perms[mode]], want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("modes", [[0], [1, 2], [2]])
+def test_degree_partial_mode_relabeling_differential(modes):
+    t = _tiny(seed=9)
+    t2, perms = reorder_tensor(t, modes, strategy="degree")
+    for m in range(t.nmodes):
+        if m not in modes:
+            np.testing.assert_array_equal(perms[m], np.arange(t.shape[m]))
+    facs = [
+        jax.random.normal(jax.random.PRNGKey(10 + i), (s, 8))
+        for i, s in enumerate(t.shape)
+    ]
+    facs2 = [
+        jax.numpy.asarray(np.asarray(f)[np.argsort(p)])
+        for f, p in zip(facs, perms)
+    ]
+    for mode in range(t.nmodes):
+        want = np.asarray(mttkrp_ref(t, facs, mode))
+        got = np.asarray(mttkrp_ref(t2, facs2, mode))
+        np.testing.assert_allclose(got[perms[mode]], want, rtol=2e-4, atol=2e-4)
+
+
+# --- plan integration and executed-trace hooks ------------------------------
+
+
+def test_plan_ordering_invariants_and_trace_matches_order():
+    t = _tiny(seed=4, nnz=500, shape=(64, 40, 30))
+    for s in ORDERINGS:
+        plan = build_mttkrp_plan(t, 0, tile_nnz=32, rows_per_block=16, ordering=s)
+        assert plan.ordering == s
+        assert (np.diff(plan.tile_block) >= 0).all()
+        real = plan.sorted_values != 0
+        order = nonzero_order(t, 0, s, rows_per_block=16)
+        np.testing.assert_array_equal(
+            plan.sorted_indices[real], t.indices[order]
+        )
+        np.testing.assert_array_equal(
+            plan.executed_row_trace(1, include_padding=False),
+            t.indices[order, 1],
+        )
+
+
+def test_executed_input_traces_follow_ordering_for_all_impls():
+    from repro.experiments.measure import executed_input_traces
+
+    t = _tiny(seed=6, nnz=700, shape=(64, 48, 32))
+    for s in ORDERINGS:
+        order = nonzero_order(t, 0, s)
+        want = t.indices[order, 2]
+        (ref_tr,) = executed_input_traces(t, "ref", 0, ordering=s)[2]
+        np.testing.assert_array_equal(ref_tr, want)
+        (pal_tr,) = executed_input_traces(t, "pallas", 0, ordering=s)[2]
+        np.testing.assert_array_equal(pal_tr, want)
+        shard_tr = executed_input_traces(t, "sharded", 0, n_shards=8, ordering=s)[2]
+        assert len(shard_tr) == 8
+        merged = np.concatenate(shard_tr)
+        assert sorted(merged.tolist()) == sorted(t.indices[:, 2].tolist())
+
+
+def test_partition_with_lex_order_matches_legacy_layout():
+    from repro.distributed.mttkrp_dist import partition_by_output_rows
+
+    t = _tiny(seed=8, nnz=777, shape=(64, 48, 32))
+    legacy = partition_by_output_rows(t, 0, 8)
+    via_order = partition_by_output_rows(t, 0, 8, order=nonzero_order(t, 0, "lex"))
+    for a, b in zip(legacy, via_order):
+        np.testing.assert_array_equal(a, b)
+
+
+# --- DSE axis + strategy-keyed memoization ----------------------------------
+
+
+def test_sweep_spec_ordering_axis_and_validation():
+    spec = SweepSpec(axes={"ordering": ("lex", "degree"), "rank": (8, 16)})
+    points = spec.points()
+    assert len(points) == 4
+    assert {p.ordering for p in points} == {"lex", "degree"}
+    assert all("ordering=" in p.label for p in points)
+    with pytest.raises(ValueError):
+        SweepSpec(axes={"ordering": ("hilbert",)})
+
+
+def test_hit_rate_cache_keys_on_strategy_for_trace_method():
+    t = _tiny(seed=7, nnz=2000, shape=(128, 96, 64))
+    from repro.data.frostt import FrosttTensor
+
+    ft = FrosttTensor("corr-test", t.shape, t.nnz, t.density, 0.8)
+    cache = HitRateCache()
+    a = cache.get(ft, 0, FPGA_GEOM, 16, method="trace", trace=t, ordering="lex")
+    b = cache.get(ft, 0, FPGA_GEOM, 16, method="trace", trace=t, ordering="degree")
+    assert cache.misses == 2  # distinct memo entries per strategy
+    cache.get(ft, 0, FPGA_GEOM, 16, method="trace", trace=t, ordering="lex")
+    assert cache.hits == 1
+    assert len(a) == len(b) == 2
+    # Che is order-blind: all strategies share one solve
+    che = HitRateCache()
+    che.get(ft, 0, FPGA_GEOM, 16, method="che", ordering="lex")
+    che.get(ft, 0, FPGA_GEOM, 16, method="che", ordering="blocked")
+    assert che.misses == 1 and che.hits == 1
+
+
+def test_ordering_uplift_on_correlated_tensor_paper_pair():
+    """On a hot-row-coupled tensor the degree strategy must strictly beat
+    lex in exact-LRU hit rate, and the priced E-SRAM/O-SRAM energy must
+    drop accordingly (the ISSUE-4 acceptance shape, shrunk for CI)."""
+    t = random_sparse_tensor(
+        (512, 8192, 8192),
+        40_000,
+        seed=7,
+        zipf_a=0.7,
+        correlation=0.9,
+        n_clusters=64,
+        shuffle=True,
+    )
+    from repro.data.frostt import FrosttTensor
+
+    ft = FrosttTensor("corr-uplift", t.shape, t.nnz, t.density, 0.7)
+    results = {}
+    for s in ("lex", "degree"):
+        points = [dataclasses.replace(p, ordering=s) for p in paper_pair()]
+        results[s] = evaluate_sweep(
+            points,
+            {ft.name: ft},
+            hit_rate_method="trace",
+            trace_tensors={ft.name: t},
+        )
+    for tech in ("E-SRAM", "O-SRAM"):
+        lex_cell = results["lex"].cell(tech, ft.name)
+        deg_cell = results["degree"].cell(tech, ft.name)
+        lex_hit = np.mean([h for mt in lex_cell.mode_times for h in mt.hit_rates])
+        deg_hit = np.mean([h for mt in deg_cell.mode_times for h in mt.hit_rates])
+        assert deg_hit > lex_hit, tech
+        assert deg_cell.energy_j < lex_cell.energy_j, tech
+
+
+def test_evaluate_sweep_refuses_ordering_axis_under_che():
+    """Che is order-blind: sweeping the ordering axis under the pure che
+    method would emit byte-identical cells per strategy — refuse it."""
+    from repro.data.frostt import FROSTT_TENSORS
+
+    points = SweepSpec(axes={"ordering": ("lex", "degree")}).points()
+    with pytest.raises(ValueError, match="invisible to the che"):
+        evaluate_sweep(points, {"NELL-2": FROSTT_TENSORS["NELL-2"]})
+
+
+def test_exact_hit_rates_ordering_lex_unchanged():
+    t = _tiny(seed=2, nnz=2000, shape=(128, 96, 64))
+    base = exact_hit_rates_for_geometry(t, 0, FPGA_GEOM, 16)
+    via = exact_hit_rates_for_geometry(t, 0, FPGA_GEOM, 16, ordering="lex")
+    assert base == via
+
+
+def test_trace_view_lex_is_mode_sorted_and_degree_relabels():
+    t = _tiny(seed=2)
+    lex_view = trace_view(t, 0, "lex")
+    np.testing.assert_array_equal(lex_view.indices, t.mode_sorted(0).indices)
+    deg_view = trace_view(t, 0, "degree")
+    # degree includes the relabeling + its execution order: equal to
+    # applying both halves explicitly
+    t_deg, _ = reorder_tensor(t, strategy="degree")
+    np.testing.assert_array_equal(
+        deg_view.indices,
+        apply_nonzero_order(t_deg, nonzero_order(t_deg, 0, "degree")).indices,
+    )
+
+
+# --- correlated generator ---------------------------------------------------
+
+
+def test_correlated_generator_marginals_and_compat():
+    with pytest.raises(ValueError):
+        random_sparse_tensor((8, 8), 10, correlation=1.5)
+    # correlation=0 is draw-for-draw the historical generator
+    a = random_sparse_tensor((32, 24, 16), 200, seed=3, zipf_a=0.8)
+    b = random_sparse_tensor((32, 24, 16), 200, seed=3, zipf_a=0.8, correlation=0.0)
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    # shuffle permutes storage, not content
+    c = random_sparse_tensor((32, 24, 16), 200, seed=3, zipf_a=0.8, shuffle=True)
+    ka = sorted(map(tuple, a.indices.tolist()))
+    kc = sorted(map(tuple, c.indices.tolist()))
+    assert ka == kc
+    assert not np.array_equal(a.indices, c.indices)
+
+
+def test_correlation_knob_creates_cross_mode_coupling():
+    """With coupling, a nonzero's mode-0 and mode-1 popularity ranks land
+    in the same quantile band far more often than independently."""
+    def band_match_rate(corr):
+        t = random_sparse_tensor(
+            (4096, 4096), 30_000, seed=5, zipf_a=0.8,
+            correlation=corr, n_clusters=16,
+        )
+        r0 = degree_reorder(t, 0)[t.indices[:, 0]] * 16 // t.shape[0]
+        r1 = degree_reorder(t, 1)[t.indices[:, 1]] * 16 // t.shape[1]
+        return float((r0 == r1).mean())
+
+    # Empirical-degree rank is a noisy popularity estimate for tail rows,
+    # so the coupled band-match rate lands well below the analytic 0.81;
+    # the gap vs the independent baseline is what the knob must create.
+    assert band_match_rate(0.9) > band_match_rate(0.0) + 0.08
+
+
+def test_executed_trace_cache_rejects_ordering_axis_sweeps():
+    """A fixed-trace cache answers from ONE executed run; sweeping the
+    ordering axis against it must raise instead of silently reporting
+    zero deltas."""
+    from repro.data.frostt import FrosttTensor
+    from repro.experiments import ExecutedTraceHitRates
+
+    t = _tiny(seed=13, nnz=400, shape=(64, 48, 32))
+    ft = FrosttTensor("guard", t.shape, t.nnz, t.density, 0.8)
+    cache = ExecutedTraceHitRates(t, "ref", ordering="lex")
+    cache.get(ft, 0, FPGA_GEOM, 16, ordering="lex")
+    cache.get(ft, 1, FPGA_GEOM, 16, ordering="lex")  # homogeneous: fine
+    with pytest.raises(ValueError, match="ordering axis"):
+        cache.get(ft, 0, FPGA_GEOM, 16, ordering="blocked")
+
+
+def test_prepare_execution_relabels_only_degree():
+    from repro.reorder import prepare_execution
+
+    t = _tiny(seed=14)
+    for s in (None, "lex", "secondary-sort", "blocked"):
+        same, perms = prepare_execution(t, s)
+        assert same is t and perms is None
+    relabeled, perms = prepare_execution(t, "degree")
+    assert perms is not None and len(perms) == t.nmodes
+    t_deg, perms_direct = reorder_tensor(t, strategy="degree")
+    np.testing.assert_array_equal(relabeled.indices, t_deg.indices)
+    with pytest.raises(ValueError):
+        prepare_execution(t, "hilbert")
+
+
+# --- engine integration -----------------------------------------------------
+
+
+def test_engine_runs_per_ordering_and_keys_tables():
+    from repro.experiments import ExperimentSpec, run_experiments
+
+    spec = ExperimentSpec(
+        tensors=(("NELL-2", 5e-5),),
+        impls=("ref",),
+        n_iters=1,
+        orderings=(None, "degree"),
+        cost_analysis=False,
+    )
+    result = run_experiments(spec)
+    assert [r.ordering for r in result.runs] == [None, "degree"]
+    native, deg = result.runs
+    assert deg.key == native.key + "/degree"
+    payload = result.to_json_dict()
+    assert native.key in payload["speedup_table"]
+    assert deg.key in payload["speedup_table"]
+    assert payload["runs"][1]["ordering"] == "degree"
+    # both runs price and reconcile on all four stacks
+    for r in result.runs:
+        assert len(r.techs) == 4
+        assert r.hit_rates
+
+
+# --- reorder bench payload --------------------------------------------------
+
+
+def test_run_reorder_sweep_payload_and_report():
+    from repro.perf.report import reorder_report_md
+    from repro.reorder.bench import run_reorder_sweep
+
+    t = _tiny(seed=12, nnz=1500, shape=(96, 512, 512))
+    payload = run_reorder_sweep({"tiny": t}, strategies=("lex", "degree"))
+    assert payload["benchmark"] == "reorder"
+    assert {r["strategy"] for r in payload["runs"]} == {"lex", "degree"}
+    assert {r["stack"] for r in payload["runs"]} == {
+        "E-SRAM", "O-SRAM", "tpu-v5e-class", "pSRAM-IMC",
+    }
+    assert len(payload["mode_cells"]) == 2 * 4 * t.nmodes
+    assert "tiny" in payload["acceptance"]["tensors"]
+    md = reorder_report_md(payload)
+    assert "Ordering sweep" in md and "Acceptance" in md
+    import json
+
+    json.dumps(payload)  # artifact-serializable
