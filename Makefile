@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,6 +23,12 @@ experiments:
 # all four memory stacks -> BENCH_reorder.json (repro.reorder).
 reorder:
 	$(PY) scripts/run_reorder.py --out BENCH_reorder.json
+
+# Fused CP-ALS executor vs the eager driver (+ vmap multi-restart
+# throughput) -> BENCH_cp_als.json; exits nonzero unless fused is
+# strictly faster everywhere and fit trajectories match (DESIGN.md §11).
+cp-als:
+	$(PY) scripts/run_cp_als.py --out BENCH_cp_als.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

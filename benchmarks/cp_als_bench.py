@@ -1,24 +1,40 @@
 """CP-ALS end-to-end benchmark on scaled FROSTT-like tensors (executable
-counterpart of the paper's workload; one row per tensor)."""
+counterpart of the paper's workload): the eager per-mode driver next to
+the fused device-resident executor (repro.core.cp_als_fused, DESIGN.md
+§11), one eager/fused row pair per tensor."""
 
 import time
 
 from repro.core.cp_als import cp_als
-from repro.data.synthetic_tensors import make_frostt_like
+from repro.core.cp_als_fused import FusedCPALS
 
 
 def run() -> list[tuple[str, float, str]]:
+    from repro.data.synthetic_tensors import make_frostt_like
+
     rows = []
     for name, scale in [("NELL-2", 2e-4), ("LBNL", 5e-2)]:
         t = make_frostt_like(name, scale=scale, seed=1)
+        n_iters = 3
+
+        cp_als(t, rank=16, n_iters=n_iters, tol=0.0, impl="ref")  # compile warmup
         t0 = time.perf_counter()
-        state = cp_als(t, rank=16, n_iters=3, impl="ref")
-        dt = (time.perf_counter() - t0) / 3
+        state = cp_als(t, rank=16, n_iters=n_iters, tol=0.0, impl="ref")
+        eager_dt = (time.perf_counter() - t0) / n_iters
+
+        executor = FusedCPALS(t, 16, impl="ref")
+        executor.run(n_iters=n_iters, tol=0.0)  # trace/compile warmup
+        t0 = time.perf_counter()
+        fused = executor.run(n_iters=n_iters, tol=0.0)
+        fused_dt = (time.perf_counter() - t0) / n_iters
+
+        derived = f"nnz={t.nnz} dims={t.shape} fit={state.fit:.3f}"
+        rows.append((f"cp_als.{name}.iter_ms", round(eager_dt * 1e3, 1), derived))
         rows.append(
             (
-                f"cp_als.{name}.iter_ms",
-                round(dt * 1e3, 1),
-                f"nnz={t.nnz} dims={t.shape} fit={state.fit:.3f}",
+                f"cp_als.{name}.fused_iter_ms",
+                round(fused_dt * 1e3, 1),
+                f"speedup={eager_dt / fused_dt:.2f}x fit={fused.state.fit:.3f}",
             )
         )
     return rows

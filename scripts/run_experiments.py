@@ -79,6 +79,17 @@ def main(argv: list[str] | None = None) -> int:
         action="store_true",
         help="skip the HLO cost_analysis lowering (faster smoke runs)",
     )
+    ap.add_argument(
+        "--no-fused",
+        action="store_true",
+        help="skip the fused-executor timing path (DESIGN.md §11)",
+    )
+    ap.add_argument(
+        "--fit-every",
+        type=int,
+        default=1,
+        help="fused executor host-sync cadence in sweeps",
+    )
     ap.add_argument("--out", default="BENCH_experiments.json")
     args = ap.parse_args(argv)
 
@@ -94,6 +105,8 @@ def main(argv: list[str] | None = None) -> int:
         n_iters=args.iters,
         seed=args.seed,
         cost_analysis=not args.no_cost_analysis,
+        fused=not args.no_fused,
+        fit_every=args.fit_every,
     )
     t0 = time.perf_counter()
     result = run_experiments(spec)

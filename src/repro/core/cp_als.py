@@ -5,6 +5,16 @@ per mode (the paper's kernel under study) followed by a rank x rank
 Hadamard-of-Grams solve.  Any of the MTTKRP impls (ref / pallas / sharded)
 can back it, selected by ``impl=``.
 
+Two execution modes share the per-mode update and fit math below:
+
+  * the eager driver (this module) dispatches one MTTKRP per mode from
+    Python and syncs the fit to the host every iteration — simple, and
+    the instrumentation surface the experiment engine hooks into;
+  * the fused executor (``repro.core.cp_als_fused``, DESIGN.md §11) runs
+    whole sweeps as one jitted ``lax.scan`` with device-resident plans,
+    syncing only at a configurable cadence; ``cp_als(..., fused=True)``
+    selects it without changing this API.
+
 Fit is computed the standard sparse way without materializing the residual:
     ||X - X_hat||^2 = ||X||^2 - 2<X, X_hat> + ||X_hat||^2
     ||X_hat||^2     = lambda^T (hadamard_k A_k^T A_k) lambda
@@ -62,7 +72,46 @@ def _fit(tensor_norm2, indices, values, factors, weights) -> jax.Array:
     xhat_norm2 = weights @ had @ weights
     inner = values @ reconstruct_values(indices, factors, weights)
     resid2 = jnp.maximum(tensor_norm2 - 2.0 * inner + xhat_norm2, 0.0)
-    return 1.0 - jnp.sqrt(resid2) / jnp.sqrt(tensor_norm2)
+    # An all-zero tensor has ||X|| = 0; the historical sqrt(0)/sqrt(0)
+    # produced a NaN fit that silently poisoned the convergence check.
+    # Both `where` branches are evaluated, so the denominator must stay
+    # nonzero on the dead branch.
+    safe_norm2 = jnp.where(tensor_norm2 > 0.0, tensor_norm2, 1.0)
+    fit = 1.0 - jnp.sqrt(resid2) / jnp.sqrt(safe_norm2)
+    return jnp.where(tensor_norm2 > 0.0, fit, 0.0)
+
+
+def _mode_update(
+    factors: Sequence[jax.Array], weights: jax.Array, m: jax.Array, mode: int
+) -> tuple[tuple[jax.Array, ...], jax.Array]:
+    """One ALS mode update from the mode's MTTKRP result ``m``.
+
+    Hadamard-of-Grams normal equations, ridge-stabilized solve, column
+    normalization into the CP lambda.  Shared verbatim by the eager driver
+    below and the fused executor (``repro.core.cp_als_fused``) so their
+    trajectories differ only by XLA op scheduling, never by math.
+
+    The solve runs in ``promote_types(m.dtype, float32)``: reduced-
+    precision factor dtypes (bf16/fp16) have no LAPACK kernels and no
+    business accumulating normal equations; fp32 inputs are bit-for-bit
+    unchanged by the promotion.
+    """
+    rank = m.shape[1]
+    solve_dtype = jnp.promote_types(m.dtype, jnp.float32)
+    had = jnp.ones((rank, rank), solve_dtype)
+    for k in range(len(factors)):
+        if k != mode:
+            fk = factors[k].astype(solve_dtype)
+            had = had * (fk.T @ fk)
+    # Solve A_mode @ had = m  (had is SPD up to rank deficiency).
+    a_new = jnp.linalg.solve(
+        had + 1e-8 * jnp.eye(rank, dtype=solve_dtype), m.T.astype(solve_dtype)
+    ).T
+    # Column normalization -> weights (standard CP-ALS lambda).
+    norms = jnp.maximum(jnp.linalg.norm(a_new, axis=0), 1e-12)
+    out = list(factors)
+    out[mode] = (a_new / norms).astype(factors[mode].dtype)
+    return tuple(out), norms.astype(weights.dtype)
 
 
 def cp_als(
@@ -75,18 +124,69 @@ def cp_als(
     impl: str = "ref",
     mttkrp_fn: Callable | None = None,
     verbose: bool = False,
+    dtype=jnp.float32,
+    fused: bool = False,
+    fit_every: int = 1,
+    restarts: int = 1,
 ) -> CPState:
     """Alternating least squares for CPD.  Returns factors + fit trace.
 
     ``mttkrp_fn(tensor, factors, mode) -> (I_mode, R)`` overrides the impl
     (used by the distributed driver to inject the sharded path with its
     precomputed plans).
+
+    ``dtype`` is the factor storage dtype (``cp_init``'s ``dtype=``,
+    previously unreachable from here); values and the tensor norm are kept
+    in ``promote_types(dtype, float32)`` so reduced-precision factors still
+    accumulate the fit in at least fp32.
+
+    ``fused=True`` delegates to the device-resident fused executor
+    (``repro.core.cp_als_fused``, DESIGN.md §11): whole sweeps run as one
+    jitted ``lax.scan``, the host syncs only every ``fit_every`` sweeps,
+    and ``restarts > 1`` runs a vmap-batched multi-start returning the
+    best-fit restart.  The returned ``CPState`` is API-identical.
     """
-    factors = cp_init(tensor, rank, seed=seed)
+    if tensor.nnz == 0:
+        raise ValueError(
+            "cp_als requires a tensor with at least one nonzero "
+            "(an empty tensor has no factorization and an undefined fit)"
+        )
+    if fused:
+        if mttkrp_fn is not None:
+            raise ValueError(
+                "mttkrp_fn injection is an eager-driver hook; the fused "
+                "executor owns its MTTKRP dispatch (use impl=)"
+            )
+        from repro.core.cp_als_fused import cp_als_fused
+
+        return cp_als_fused(
+            tensor,
+            rank,
+            n_iters=n_iters,
+            tol=tol,
+            seed=seed,
+            impl=impl,
+            dtype=dtype,
+            fit_every=fit_every,
+            restarts=restarts,
+            verbose=verbose,
+        ).state
+    if restarts != 1:
+        raise ValueError("restarts > 1 requires fused=True (vmap batching)")
+    if fit_every != 1:
+        raise ValueError(
+            "fit_every requires fused=True (the eager driver syncs every "
+            "iteration by construction)"
+        )
+
+    compute_dtype = jnp.promote_types(dtype, jnp.float32)
+    factors = tuple(cp_init(tensor, rank, seed=seed, dtype=dtype))
     weights = jnp.ones((rank,), factors[0].dtype)
     indices = jnp.asarray(tensor.indices)
-    values = jnp.asarray(tensor.values)
-    tensor_norm2 = jnp.asarray(float((tensor.values.astype(np.float64) ** 2).sum()))
+    values = jnp.asarray(tensor.values).astype(compute_dtype)
+    tensor_norm2 = jnp.asarray(
+        float((tensor.values.astype(np.float64) ** 2).sum()), dtype=compute_dtype
+    )
 
     if mttkrp_fn is None:
         if impl == "ref":
@@ -100,18 +200,7 @@ def cp_als(
     for it in range(1, n_iters + 1):
         for mode in range(tensor.nmodes):
             m = mttkrp_fn(tensor, factors, mode)  # (I_mode, R)
-            had = jnp.ones((rank, rank), m.dtype)
-            for k in range(tensor.nmodes):
-                if k != mode:
-                    had = had * (factors[k].T @ factors[k])
-            # Solve A_mode @ had = m  (had is SPD up to rank deficiency).
-            a_new = jnp.linalg.solve(
-                had + 1e-8 * jnp.eye(rank, dtype=m.dtype), m.T
-            ).T
-            # Column normalization -> weights (standard CP-ALS lambda).
-            norms = jnp.maximum(jnp.linalg.norm(a_new, axis=0), 1e-12)
-            factors[mode] = a_new / norms
-            weights = norms.astype(weights.dtype)
+            factors, weights = _mode_update(factors, weights, m, mode)
 
         fit = float(_fit(tensor_norm2, indices, values, factors, weights))
         fits.append(fit)
@@ -121,4 +210,6 @@ def cp_als(
             break
         fit_prev = fit
 
-    return CPState(factors=factors, weights=weights, fit=fits[-1], fits=fits, iters=it)
+    return CPState(
+        factors=list(factors), weights=weights, fit=fits[-1], fits=fits, iters=it
+    )

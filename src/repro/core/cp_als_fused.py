@@ -1,0 +1,370 @@
+"""Fused, batched, device-resident CP-ALS executor (DESIGN.md §11).
+
+The eager driver (``repro.core.cp_als``) dispatches one MTTKRP per mode
+from Python and blocks on ``float(fit)`` every iteration — host overhead
+the paper's accelerator never pays, and overhead the measured wall times
+of the experiment engine therefore over-charge.  This executor removes
+it:
+
+  * **plan residency** — every per-mode ``MTTKRPPlan`` (pallas) /
+    ``ShardedModeSetup`` (sharded) / ordered COO view (ref) is built once
+    at construction and lives on device for all sweeps and restarts;
+  * **fused sweeps** — an entire ALS sweep (all modes' MTTKRP +
+    Hadamard-of-Grams solve + column normalization) plus the in-graph fit
+    runs as one jitted ``lax.scan`` over iterations.  The per-mode update
+    loop unrolls at trace time: factor matrices have heterogeneous shapes
+    ``(I_k, R)``, so a traced-index mode loop would force padding every
+    factor to the largest mode — unrolling keeps the math identical to
+    the eager driver (both call ``cp_als._mode_update`` / ``cp_als._fit``);
+  * **sync cadence** — the host syncs fits only every ``fit_every``
+    sweeps; convergence is checked against the in-graph fit trajectory at
+    each sync point, so ``fit_every=1`` reproduces the eager driver's
+    per-iteration early-stop exactly while larger cadences trade up to
+    ``fit_every - 1`` extra sweeps for fewer device round-trips;
+  * **batched multi-restart** — ``restarts > 1`` vmaps the whole sweep
+    over independent ``cp_init`` seeds (one compiled program, factor
+    batch leading axis) and returns the best-final-fit restart — the
+    "many concurrent decompositions" serving scenario.
+
+Fused and eager trajectories differ only by XLA op scheduling inside the
+fused trace; ``FUSED_FIT_TOL`` is the documented float-summation
+tolerance that equivalence tests and the ``BENCH_cp_als.json`` gate
+enforce (tests/test_cp_als.py, scripts/run_cp_als.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.cp_als import CPState, _fit, _mode_update, cp_init
+from repro.core.mttkrp import mttkrp_ref
+from repro.core.sparse_tensor import SparseTensor
+
+__all__ = ["FUSED_FIT_TOL", "BatchedCPState", "FusedCPALS", "cp_als_fused"]
+
+# Documented fused-vs-eager fit tolerance: same seeds, same math, but one
+# fused XLA program may re-associate float summations the eager per-op
+# dispatch kept separate.  Enforced by tests/test_cp_als.py and the
+# BENCH_cp_als.json acceptance gate.
+FUSED_FIT_TOL = 2e-3
+
+
+@dataclasses.dataclass
+class BatchedCPState:
+    """Result of a fused (possibly multi-restart) CP-ALS run.
+
+    ``state`` is the best-final-fit restart as a plain ``CPState`` (the
+    eager driver's return type); ``fits`` keeps every restart's full
+    trajectory, ``(restarts, iters)``.  ``sync_count`` is the number of
+    device→host fit syncs the run performed — the eager driver pays one
+    per iteration, this executor one per ``fit_every`` sweeps.
+    """
+
+    state: CPState
+    best_restart: int
+    seeds: tuple[int, ...]
+    fits: np.ndarray  # (restarts, iters)
+    sync_count: int
+
+    @property
+    def final_fits(self) -> tuple[float, ...]:
+        return tuple(float(f) for f in self.fits[:, -1])
+
+
+class FusedCPALS:
+    """Device-resident CP-ALS executor for one (tensor, impl, ordering).
+
+    Construction does all host-side work — plan builds, shard
+    partitioning, buffer upload; ``run`` only launches compiled sweeps.
+    Reuse one executor across runs (restarts, seeds, iteration budgets):
+    the per-block-length jit cache and every device buffer are shared.
+    """
+
+    def __init__(
+        self,
+        tensor: SparseTensor,
+        rank: int,
+        *,
+        impl: str = "ref",
+        dtype=jnp.float32,
+        tile_nnz: int = 256,
+        rows_per_block: int = 256,
+        ordering: str | None = None,
+        scheme: str = "mode_ordered",
+        interpret: bool | None = None,
+    ) -> None:
+        if tensor.nnz == 0:
+            raise ValueError(
+                "cp_als requires a tensor with at least one nonzero "
+                "(an empty tensor has no factorization and an undefined fit)"
+            )
+        if impl not in ("ref", "pallas", "sharded"):
+            raise ValueError(f"unknown impl {impl!r}")
+        self.tensor = tensor
+        self.rank = int(rank)
+        self.impl = impl
+        self.dtype = dtype
+        self.ordering = ordering
+        self.nmodes = tensor.nmodes
+        compute_dtype = jnp.promote_types(dtype, jnp.float32)
+        # Fit operands (raw COO order, exactly what the eager driver uses).
+        self._indices = jnp.asarray(tensor.indices)
+        self._values = jnp.asarray(tensor.values).astype(compute_dtype)
+        self._norm2 = jnp.asarray(
+            float((tensor.values.astype(np.float64) ** 2).sum()), dtype=compute_dtype
+        )
+        self._sweep_cache: dict[tuple[int, bool], callable] = {}
+
+        if impl == "ref":
+            # Per-mode ordered COO views when a strategy is requested
+            # (repro.reorder, DESIGN.md §10); one shared view otherwise.
+            self._ref_streams: dict[int, tuple[jax.Array, jax.Array]] = {}
+            if ordering is not None:
+                from repro.reorder import nonzero_order
+
+                for m in range(self.nmodes):
+                    o = nonzero_order(
+                        tensor, m, ordering, rows_per_block=rows_per_block
+                    )
+                    self._ref_streams[m] = (
+                        jnp.asarray(tensor.indices[o]),
+                        jnp.asarray(tensor.values[o]).astype(compute_dtype),
+                    )
+            else:
+                shared = (self._indices, self._values)
+                self._ref_streams = {m: shared for m in range(self.nmodes)}
+        elif impl == "pallas":
+            from repro.kernels.mttkrp.ops import (
+                _default_interpret,
+                get_plan,
+                plan_device_buffers,
+            )
+
+            self._interpret = (
+                _default_interpret() if interpret is None else interpret
+            )
+            self._plans = [
+                get_plan(
+                    tensor,
+                    m,
+                    tile_nnz=tile_nnz,
+                    rows_per_block=rows_per_block,
+                    ordering=ordering if ordering is not None else "lex",
+                )
+                for m in range(self.nmodes)
+            ]
+            # Upload once; every sweep of every restart reuses the buffers.
+            for p in self._plans:
+                plan_device_buffers(p)
+        else:  # sharded
+            from repro.distributed.mttkrp_dist import build_sharded_mode_setup
+
+            self._axis = "data"
+            self._mesh = jax.make_mesh((jax.device_count(),), (self._axis,))
+            n = self._mesh.shape[self._axis]
+            self._setups = [
+                build_sharded_mode_setup(
+                    tensor,
+                    m,
+                    n,
+                    scheme=scheme,
+                    ordering=ordering,
+                    rows_per_block=rows_per_block,
+                )
+                for m in range(self.nmodes)
+            ]
+
+    # -- device-side MTTKRP dispatch (called inside the jitted sweep) -------
+
+    def _mttkrp(self, factors: Sequence[jax.Array], mode: int) -> jax.Array:
+        if self.impl == "ref":
+            idx_m, val_m = self._ref_streams[mode]
+            return mttkrp_ref((idx_m, val_m, self.tensor.shape), factors, mode)
+        if self.impl == "pallas":
+            from repro.kernels.mttkrp.ops import mttkrp_pallas_from_plan
+
+            return mttkrp_pallas_from_plan(
+                self._plans[mode], factors, interpret=self._interpret
+            )
+        from repro.distributed.mttkrp_dist import mttkrp_sharded_apply
+
+        return mttkrp_sharded_apply(
+            self._setups[mode], factors, mesh=self._mesh, axis=self._axis
+        )
+
+    # -- fused sweep blocks --------------------------------------------------
+
+    def _sweep_fn(self, length: int, batched: bool):
+        """Jitted ``length``-sweep block; cached per (length, batched)."""
+        key = (length, batched)
+        fn = self._sweep_cache.get(key)
+        if fn is not None:
+            return fn
+
+        def sweep(factors, weights):
+            def body(carry, _):
+                factors, weights = carry
+                for mode in range(self.nmodes):  # unrolled at trace time
+                    m = self._mttkrp(factors, mode)
+                    factors, weights = _mode_update(factors, weights, m, mode)
+                fit = _fit(self._norm2, self._indices, self._values, factors, weights)
+                return (factors, weights), fit
+
+            (factors, weights), fits = lax.scan(
+                body, (factors, weights), None, length=length
+            )
+            return factors, weights, fits
+
+        if batched:
+            sweep = jax.vmap(sweep)
+        fn = jax.jit(sweep)
+        self._sweep_cache[key] = fn
+        return fn
+
+    # -- driver ---------------------------------------------------------------
+
+    def run(
+        self,
+        *,
+        n_iters: int = 20,
+        tol: float = 1e-5,
+        seed: int = 0,
+        seeds: Sequence[int] | None = None,
+        restarts: int = 1,
+        fit_every: int = 1,
+        verbose: bool = False,
+    ) -> BatchedCPState:
+        """Run CP-ALS; host sync only every ``fit_every`` sweeps.
+
+        ``seeds`` (or ``seed + i`` for ``i < restarts``) select the
+        ``cp_init`` draws; with more than one, the sweep is vmapped over
+        the restart axis and the run stops early only when EVERY
+        restart's fit delta falls below ``tol``.  Convergence is checked
+        over the in-graph fit trajectory at each sync point; on a
+        mid-block stop the returned fit trace is truncated at the
+        converged iteration while factors are from the end of the last
+        executed block (``fit_every=1`` matches the eager driver
+        exactly, factors included).
+        """
+        if n_iters < 1:
+            raise ValueError(f"n_iters must be >= 1, got {n_iters}")
+        if fit_every < 1:
+            raise ValueError(f"fit_every must be >= 1, got {fit_every}")
+        if restarts < 1:
+            raise ValueError(f"restarts must be >= 1, got {restarts}")
+        if seeds is None:
+            seeds = tuple(seed + i for i in range(restarts))
+        seeds = tuple(int(s) for s in seeds)
+        batched = len(seeds) > 1
+
+        inits = [
+            cp_init(self.tensor, self.rank, seed=s, dtype=self.dtype) for s in seeds
+        ]
+        if batched:
+            factors = tuple(
+                jnp.stack([init[k] for init in inits]) for k in range(self.nmodes)
+            )
+            weights = jnp.ones((len(seeds), self.rank), factors[0].dtype)
+        else:
+            factors = tuple(inits[0])
+            weights = jnp.ones((self.rank,), factors[0].dtype)
+
+        fit_cols: list[np.ndarray] = []  # one (restarts,) column per iteration
+        fit_prev = np.full((len(seeds),), -np.inf)
+        it = 0
+        syncs = 0
+        converged = False
+        while it < n_iters and not converged:
+            block = min(fit_every, n_iters - it)
+            factors, weights, fits = self._sweep_fn(block, batched)(factors, weights)
+            # The ONLY device→host sync of the block.
+            block_fits = np.asarray(jax.block_until_ready(fits), dtype=np.float64)
+            syncs += 1
+            cols = block_fits if batched else block_fits[None, :]  # (R, block)
+            for j in range(cols.shape[1]):
+                it += 1
+                fit_cols.append(cols[:, j])
+                if verbose:
+                    shown = ", ".join(f"{f:.6f}" for f in cols[:, j])
+                    print(f"  fused ALS iter {it:3d}  fit=[{shown}]")
+                if np.all(np.abs(cols[:, j] - fit_prev) < tol):
+                    converged = True
+                    fit_prev = cols[:, j]
+                    break
+                fit_prev = cols[:, j]
+
+        fits_mat = np.stack(fit_cols, axis=1)  # (restarts, iters)
+        best = int(np.argmax(fits_mat[:, -1]))
+        if batched:
+            best_factors = [f[best] for f in factors]
+            best_weights = weights[best]
+        else:
+            best_factors = list(factors)
+            best_weights = weights
+        state = CPState(
+            factors=best_factors,
+            weights=best_weights,
+            fit=float(fits_mat[best, -1]),
+            fits=[float(f) for f in fits_mat[best]],
+            iters=it,
+        )
+        return BatchedCPState(
+            state=state,
+            best_restart=best,
+            seeds=seeds,
+            fits=fits_mat,
+            sync_count=syncs,
+        )
+
+
+def cp_als_fused(
+    tensor: SparseTensor,
+    rank: int,
+    *,
+    n_iters: int = 20,
+    tol: float = 1e-5,
+    seed: int = 0,
+    seeds: Sequence[int] | None = None,
+    restarts: int = 1,
+    fit_every: int = 1,
+    impl: str = "ref",
+    dtype=jnp.float32,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    ordering: str | None = None,
+    scheme: str = "mode_ordered",
+    interpret: bool | None = None,
+    verbose: bool = False,
+) -> BatchedCPState:
+    """One-shot fused CP-ALS (build the executor, run once).
+
+    ``cp_als(..., fused=True)`` wraps this and returns ``.state``; call
+    this directly (or hold a ``FusedCPALS``) for restart batching,
+    per-restart trajectories, and executor reuse across runs.
+    """
+    executor = FusedCPALS(
+        tensor,
+        rank,
+        impl=impl,
+        dtype=dtype,
+        tile_nnz=tile_nnz,
+        rows_per_block=rows_per_block,
+        ordering=ordering,
+        scheme=scheme,
+        interpret=interpret,
+    )
+    return executor.run(
+        n_iters=n_iters,
+        tol=tol,
+        seed=seed,
+        seeds=seeds,
+        restarts=restarts,
+        fit_every=fit_every,
+        verbose=verbose,
+    )

@@ -18,6 +18,7 @@ Two schemes, mirroring DESIGN.md §2's changed-assumptions note:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -28,7 +29,13 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.sparse_tensor import SparseTensor
 
-__all__ = ["mttkrp_sharded", "partition_by_output_rows"]
+__all__ = [
+    "ShardedModeSetup",
+    "build_sharded_mode_setup",
+    "mttkrp_sharded",
+    "mttkrp_sharded_apply",
+    "partition_by_output_rows",
+]
 
 
 def partition_by_output_rows(
@@ -95,36 +102,45 @@ def partition_by_output_rows(
     return out_idx, out_val, row_start
 
 
-def mttkrp_sharded(
+@dataclasses.dataclass(frozen=True)
+class ShardedModeSetup:
+    """Host-precomputed, device-resident buffers for one (mode, scheme).
+
+    The O(nnz log nnz) partitioning work of the sharded path, split off
+    from the per-call math so callers that run many MTTKRPs per mode —
+    the fused CP-ALS executor (DESIGN.md §11) — pay it once.  All arrays
+    are device-resident; ``mttkrp_sharded_apply`` is pure jax and legal
+    inside a jit trace (including under ``lax.scan`` / ``vmap``).
+
+    ``leftover_idx``/``leftover_val`` hold the nonzeros masked out of the
+    equal-height shard blocks (the block-vs-nnz boundary mismatch); None
+    when the partition has no such residue.
+    """
+
+    mode: int
+    scheme: str
+    nmodes: int
+    i_out: int
+    n_shards: int
+    rows_per: int  # mode_ordered: output block height per shard
+    idx: jax.Array  # mode_ordered: (n, per, nmodes); allreduce: (n*per, nmodes)
+    val: jax.Array
+    row_start: jax.Array | None  # mode_ordered only
+    leftover_idx: jax.Array | None
+    leftover_val: jax.Array | None
+
+
+def build_sharded_mode_setup(
     tensor: SparseTensor,
-    factors,
     mode: int,
+    n_shards: int,
     *,
-    mesh: Mesh | None = None,
-    axis: str = "data",
     scheme: str = "mode_ordered",
     ordering: str | None = None,
     rows_per_block: int = 256,
-):
-    """Multi-device MTTKRP.  Returns (I_mode, R) on the host layout.
-
-    ``ordering`` selects the within-shard nonzero execution order
-    (repro.reorder, DESIGN.md §10); shard ownership — row ranges under
-    ``mode_ordered``, equal blocks under ``allreduce`` — is a hardware
-    constraint and stays fixed.  ``None`` keeps the historical layouts
-    (raw order for ``allreduce``, stable output-mode sort otherwise).
-    ``rows_per_block`` is the blocked strategy's output-tile height; it
-    must match the value the trace capture uses
-    (``executed_input_traces``) or the measured order is not the
-    executed one.
-    """
-    if mesh is None:
-        mesh = jax.make_mesh((jax.device_count(),), (axis,))
-    n = mesh.shape[axis]
+) -> ShardedModeSetup:
+    """Partition ``tensor`` for ``mode`` once; see ``mttkrp_sharded``."""
     i_out = tensor.shape[mode]
-    rank = factors[0].shape[1]
-    facs = tuple(jnp.asarray(f) for f in factors)
-
     ord_perm = None
     if ordering is not None:
         from repro.reorder import nonzero_order
@@ -134,15 +150,75 @@ def mttkrp_sharded(
     if scheme == "allreduce":
         # block-shard nonzeros (pad to multiple of n)
         nnz = tensor.nnz
-        per = -(-nnz // n)
-        idx = np.zeros((n * per, tensor.nmodes), np.int32)
-        val = np.zeros((n * per,), tensor.values.dtype)
+        per = -(-nnz // n_shards)
+        idx = np.zeros((n_shards * per, tensor.nmodes), np.int32)
+        val = np.zeros((n_shards * per,), tensor.values.dtype)
         idx[:nnz] = tensor.indices if ord_perm is None else tensor.indices[ord_perm]
         val[:nnz] = tensor.values if ord_perm is None else tensor.values[ord_perm]
+        return ShardedModeSetup(
+            mode=mode,
+            scheme=scheme,
+            nmodes=tensor.nmodes,
+            i_out=i_out,
+            n_shards=n_shards,
+            rows_per=per,
+            idx=jnp.asarray(idx),
+            val=jnp.asarray(val),
+            row_start=None,
+            leftover_idx=None,
+            leftover_val=None,
+        )
+    if scheme != "mode_ordered":
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    idx_s, val_s, row_start = partition_by_output_rows(
+        tensor, mode, n_shards, order=ord_perm
+    )
+    rows_per = -(-i_out // n_shards)  # output block height per shard (padded)
+
+    # Nonzeros masked out of the equal-height blocks (row not in the block
+    # of their nnz-shard) — typically a tiny boundary fraction; contributed
+    # back by a second (sparse, tiny) pass in the apply step.
+    rows = idx_s[..., mode]
+    shard_of_nnz = np.repeat(np.arange(n_shards)[:, None], idx_s.shape[1], 1)
+    owned = (rows >= shard_of_nnz * rows_per) & (rows < (shard_of_nnz + 1) * rows_per)
+    leftover = ~owned & (val_s != 0)
+    leftover_idx = leftover_val = None
+    if leftover.any():
+        leftover_idx = jnp.asarray(idx_s[leftover])
+        leftover_val = jnp.asarray(val_s[leftover].astype(np.float32))
+    return ShardedModeSetup(
+        mode=mode,
+        scheme=scheme,
+        nmodes=tensor.nmodes,
+        i_out=i_out,
+        n_shards=n_shards,
+        rows_per=rows_per,
+        idx=jnp.asarray(idx_s),
+        val=jnp.asarray(val_s),
+        row_start=jnp.asarray(row_start),
+        leftover_idx=leftover_idx,
+        leftover_val=leftover_val,
+    )
+
+
+def mttkrp_sharded_apply(
+    setup: ShardedModeSetup, factors, *, mesh: Mesh, axis: str = "data"
+) -> jax.Array:
+    """Device math of the sharded MTTKRP over a precomputed partition.
+
+    Pure jax (no host work): safe to call inside a jit trace, so the
+    fused executor can run it under ``lax.scan``/``vmap`` (DESIGN.md §11).
+    """
+    mode, rows_per, i_out = setup.mode, setup.rows_per, setup.i_out
+    rank = factors[0].shape[1]
+    facs = tuple(jnp.asarray(f) for f in factors)
+
+    if setup.scheme == "allreduce":
 
         def local(idx_l, val_l, *facs_l):
             acc = val_l.astype(jnp.float32)[:, None] * jnp.ones((1, rank), jnp.float32)
-            for k in range(tensor.nmodes):
+            for k in range(setup.nmodes):
                 if k == mode:
                     continue
                 acc = acc * jnp.take(facs_l[k], idx_l[:, k], axis=0).astype(jnp.float32)
@@ -156,16 +232,13 @@ def mttkrp_sharded(
             out_specs=P(None, None),
             check_rep=False,
         )
-        return fn(jnp.asarray(idx), jnp.asarray(val), *facs)[:i_out].astype(facs[mode].dtype)
+        return fn(setup.idx, setup.val, *facs)[:i_out].astype(facs[mode].dtype)
 
     # --- paper-faithful: output-row partitioning, no reduction --------------
-    idx_s, val_s, row_start = partition_by_output_rows(tensor, mode, n, order=ord_perm)
-    rows_per = -(-i_out // n)  # output block height per shard (padded)
-
     def local(idx_l, val_l, start_l, *facs_l):
         idx_l, val_l, start_l = idx_l[0], val_l[0], start_l[0]
         acc = val_l.astype(jnp.float32)[:, None] * jnp.ones((1, rank), jnp.float32)
-        for k in range(tensor.nmodes):
+        for k in range(setup.nmodes):
             if k == mode:
                 continue
             acc = acc * jnp.take(facs_l[k], idx_l[:, k], axis=0).astype(jnp.float32)
@@ -192,26 +265,57 @@ def mttkrp_sharded(
         out_specs=P(axis, None, None),
         check_rep=False,
     )
-    # For exactness across block-vs-nnz boundary mismatch, fall back to
-    # contributing masked-out nonzeros via a second (sparse, tiny) pass.
-    out = fn(jnp.asarray(idx_s), jnp.asarray(val_s), jnp.asarray(row_start), *facs)
-    out = out.reshape(n * rows_per, rank)[:i_out]
+    out = fn(setup.idx, setup.val, setup.row_start, *facs)
+    out = out.reshape(setup.n_shards * rows_per, rank)[:i_out]
 
-    # residual pass: nonzeros masked out above (row not in the equal-height
-    # block of their nnz-shard) — typically a tiny fraction near boundaries.
-    rows = idx_s[..., mode]
-    shard_of_nnz = np.repeat(np.arange(n)[:, None], idx_s.shape[1], 1)
-    owned = (rows >= shard_of_nnz * rows_per) & (rows < (shard_of_nnz + 1) * rows_per)
-    leftover = ~owned & (val_s != 0)
-    if leftover.any():
-        li = idx_s[leftover]
-        lv = val_s[leftover]
-        accj = jnp.asarray(lv.astype(np.float32))[:, None] * jnp.ones((1, rank), jnp.float32)
-        for k in range(tensor.nmodes):
+    # residual pass: the setup's precomputed leftover nonzeros.
+    if setup.leftover_idx is not None:
+        li, lv = setup.leftover_idx, setup.leftover_val
+        accj = lv[:, None] * jnp.ones((1, rank), jnp.float32)
+        for k in range(setup.nmodes):
             if k == mode:
                 continue
-            accj = accj * jnp.take(facs[k], jnp.asarray(li[:, k]), axis=0).astype(jnp.float32)
-        out = out + jax.ops.segment_sum(
-            accj, jnp.asarray(li[:, mode]), num_segments=out.shape[0]
-        )
+            accj = accj * jnp.take(facs[k], li[:, k], axis=0).astype(jnp.float32)
+        out = out + jax.ops.segment_sum(accj, li[:, mode], num_segments=out.shape[0])
     return out.astype(facs[mode].dtype)
+
+
+def mttkrp_sharded(
+    tensor: SparseTensor,
+    factors,
+    mode: int,
+    *,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    scheme: str = "mode_ordered",
+    ordering: str | None = None,
+    rows_per_block: int = 256,
+):
+    """Multi-device MTTKRP.  Returns (I_mode, R) on the host layout.
+
+    ``ordering`` selects the within-shard nonzero execution order
+    (repro.reorder, DESIGN.md §10); shard ownership — row ranges under
+    ``mode_ordered``, equal blocks under ``allreduce`` — is a hardware
+    constraint and stays fixed.  ``None`` keeps the historical layouts
+    (raw order for ``allreduce``, stable output-mode sort otherwise).
+    ``rows_per_block`` is the blocked strategy's output-tile height; it
+    must match the value the trace capture uses
+    (``executed_input_traces``) or the measured order is not the
+    executed one.
+
+    Repartitions on every call (its documented host-side dispatch cost);
+    callers running many MTTKRPs per mode should hold a
+    ``build_sharded_mode_setup`` result and call ``mttkrp_sharded_apply``
+    — the fused CP-ALS executor does (DESIGN.md §11).
+    """
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), (axis,))
+    setup = build_sharded_mode_setup(
+        tensor,
+        mode,
+        mesh.shape[axis],
+        scheme=scheme,
+        ordering=ordering,
+        rows_per_block=rows_per_block,
+    )
+    return mttkrp_sharded_apply(setup, factors, mesh=mesh, axis=axis)

@@ -94,6 +94,12 @@ class ExperimentSpec:
     # relabeled shapes; the fit metric is label-invariant).
     orderings: tuple[str | None, ...] = (None,)
     cost_analysis: bool = True
+    # Also time the fused executor (repro.core.cp_als_fused, DESIGN.md §11)
+    # on every (tensor, impl, ordering) cell, attaching the ``fused_*``
+    # wall-time fields to each MeasuredRun and the fused-vs-eager table to
+    # the artifact.
+    fused: bool = True
+    fit_every: int = 1
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -237,6 +243,33 @@ class ExperimentResult:
             }
         return out
 
+    def fused_table(self) -> dict[str, dict[str, float]]:
+        """Per run (tensor/impl[/ordering]): eager vs fused executor wall
+        time (DESIGN.md §11).  Empty when the spec ran without ``fused``.
+
+        Like-for-like only: ``speedup_cold`` compares two cold runs (the
+        eager wall includes per-mode first-call compiles, the fused wall
+        its plan build + trace/compile); ``speedup_warm_est`` compares
+        the warm fused run against ``MeasuredRun.eager_warm_est_s`` (the
+        eager wall with the measured per-mode compile surplus removed —
+        the dedicated ``make cp-als`` bench measures warm-vs-warm
+        directly and is the gated comparison)."""
+        out: dict[str, dict[str, float]] = {}
+        for r in self.runs:
+            m = r.measured
+            if m.fused_warm_wall_s is None:
+                continue
+            out[r.key] = {
+                "eager_wall_s": m.wall_s,
+                "eager_warm_est_s": m.eager_warm_est_s,
+                "fused_wall_s": m.fused_wall_s,
+                "fused_warm_wall_s": m.fused_warm_wall_s,
+                "speedup_cold": m.wall_s / m.fused_wall_s,
+                "speedup_warm_est": m.eager_warm_est_s / m.fused_warm_wall_s,
+                "max_fit_delta": m.fused_max_fit_delta,
+            }
+        return out
+
     def to_json_dict(self) -> dict:
         return {
             "benchmark": "experiments",
@@ -246,6 +279,7 @@ class ExperimentResult:
             "all_within_tol": self.all_within_tol,
             "speedup_table": self.speedup_table(),
             "energy_table": self.energy_table(),
+            "fused_table": self.fused_table(),
             "runs": [r.to_dict() for r in self.runs],
             "skipped": self.skipped,
         }
@@ -278,6 +312,8 @@ def _measure(
         seed=spec.seed,
         ordering=ordering,
         cost_analysis=spec.cost_analysis,
+        fused=spec.fused,
+        fit_every=spec.fit_every,
     )
 
 
@@ -308,6 +344,8 @@ def _measure_sharded_subprocess(
             "scheme": spec.scheme,
             "ordering": ordering,
             "devices": spec.n_shards,
+            "fused": spec.fused,
+            "fit_every": spec.fit_every,
         }
     )
     env = os.environ.copy()

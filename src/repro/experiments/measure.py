@@ -64,7 +64,18 @@ class MeasuredMode:
 
 @dataclasses.dataclass(frozen=True)
 class MeasuredRun:
-    """One executed CP-ALS sweep of one impl on one scaled tensor."""
+    """One executed CP-ALS sweep of one impl on one scaled tensor.
+
+    The ``fused_*`` fields are the fused-executor timing path
+    (``repro.core.cp_als_fused``, DESIGN.md §11), measured on the same
+    (tensor, impl, ordering, seed): ``fused_wall_s`` is the cold run
+    (plan build + trace/compile included), ``fused_warm_wall_s`` a second
+    run on the reused executor — the steady-state cost the eager per-call
+    dispatch should be compared against.  ``fused_max_fit_delta`` is the
+    max |fused − eager| over the fit trajectories (same seeds), the
+    fused-vs-eager equivalence the bench gate enforces.  ``None`` when
+    the fused path was not measured.
+    """
 
     tensor: str
     impl: str
@@ -74,10 +85,28 @@ class MeasuredRun:
     iters: int
     wall_s: float
     modes: tuple[MeasuredMode, ...]
+    fused_wall_s: float | None = None
+    fused_warm_wall_s: float | None = None
+    fused_fit: float | None = None
+    fused_max_fit_delta: float | None = None
 
     @property
     def steady_mode_s(self) -> tuple[float, ...]:
         return tuple(m.steady_s for m in self.modes)
+
+    @property
+    def eager_warm_est_s(self) -> float:
+        """Eager wall with each mode's first-call compile surplus removed.
+
+        ``wall_s`` is a single cold run (the per-mode jits compile on
+        their first call); the warm fused wall must not be compared
+        against it directly.  The instrumentation already separates each
+        mode's first call from its steady median, so subtracting the
+        per-mode surplus ``first_s − steady_s`` yields a warm-eager
+        estimate without paying for a second full eager run (the sharded
+        path costs tens of seconds per run)."""
+        surplus = sum(max(m.first_s - m.steady_s, 0.0) for m in self.modes)
+        return max(self.wall_s - surplus, 0.0)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -152,6 +181,8 @@ def measure_cp_als(
     rows_per_block: int = 256,
     ordering: str | None = None,
     cost_analysis: bool = True,
+    fused: bool = False,
+    fit_every: int = 1,
 ) -> MeasuredRun:
     """Run CP-ALS with an instrumented MTTKRP and collect per-mode timings.
 
@@ -171,6 +202,12 @@ def measure_cp_als(
     strategy, the sharded path lays each shard out in it.  ``None`` keeps
     the impl-native order.  For the degree strategy, relabel the tensor
     (and factors) first — the engine does.
+
+    ``fused=True`` additionally times the fused executor on the same
+    configuration — one cold run (plan build + compile) and one warm run
+    on the reused executor, both ``block_until_ready``-fenced — and
+    attaches the ``fused_*`` fields, so one ``MeasuredRun`` carries the
+    eager-vs-fused wall-time comparison (DESIGN.md §11).
     """
     import jax
     import jax.numpy as jnp
@@ -265,6 +302,35 @@ def measure_cp_als(
                 paper_flops=2.0 * tensor.nmodes * tensor.nnz * rank,
             )
         )
+    fused_wall = fused_warm = fused_fit = fused_delta = None
+    if fused:
+        from repro.core.cp_als_fused import FusedCPALS
+
+        executor = FusedCPALS(
+            tensor,
+            rank,
+            impl=impl,
+            tile_nnz=tile_nnz,
+            rows_per_block=rows_per_block,
+            ordering=ordering,
+            scheme=scheme,
+            # The instrumented eager base above runs the pallas kernel with
+            # interpret=True unconditionally; the fused side must match or
+            # on a TPU backend the comparison would measure emulator vs
+            # hardware instead of dispatch overhead.
+            interpret=True if impl == "pallas" else None,
+        )
+        t0 = time.perf_counter()
+        executor.run(n_iters=n_iters, tol=0.0, seed=seed, fit_every=fit_every)
+        fused_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = executor.run(n_iters=n_iters, tol=0.0, seed=seed, fit_every=fit_every)
+        fused_warm = time.perf_counter() - t0
+        fused_fit = warm.state.fit
+        fused_delta = float(
+            np.max(np.abs(np.asarray(warm.state.fits) - np.asarray(state.fits)))
+        )
+
     return MeasuredRun(
         tensor=name,
         impl=impl,
@@ -274,6 +340,10 @@ def measure_cp_als(
         iters=state.iters,
         wall_s=wall_s,
         modes=tuple(modes),
+        fused_wall_s=fused_wall,
+        fused_warm_wall_s=fused_warm,
+        fused_fit=fused_fit,
+        fused_max_fit_delta=fused_delta,
     )
 
 

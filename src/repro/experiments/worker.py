@@ -53,6 +53,10 @@ def main() -> int:
         # cost_analysis lowers the ref closure as a stand-in; the sharded
         # shard_map path is traced eagerly and has no single compiled HLO.
         cost_analysis=False,
+        # Fused-executor timing (DESIGN.md §11) runs HERE so the fused
+        # sharded path sees the same forced-host-device mesh.
+        fused=bool(payload.get("fused", False)),
+        fit_every=int(payload.get("fit_every", 1)),
     )
     print(json.dumps(run.to_dict()))
     return 0

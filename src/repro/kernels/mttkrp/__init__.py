@@ -1,3 +1,15 @@
-from repro.kernels.mttkrp.ops import get_plan, mttkrp_pallas, mttkrp_pallas_from_plan
+from repro.kernels.mttkrp.ops import (
+    PlanBuffers,
+    get_plan,
+    mttkrp_pallas,
+    mttkrp_pallas_from_plan,
+    plan_device_buffers,
+)
 
-__all__ = ["mttkrp_pallas", "mttkrp_pallas_from_plan", "get_plan"]
+__all__ = [
+    "PlanBuffers",
+    "get_plan",
+    "mttkrp_pallas",
+    "mttkrp_pallas_from_plan",
+    "plan_device_buffers",
+]

@@ -134,6 +134,23 @@ def experiments_report_md(payload: dict) -> str:
                     f"{mm['steady_s']*1e3:.1f}" for mm in m["modes"]
                 ),
                 "wall_s": m["wall_s"],
+                # Warm-vs-warm(est): eager wall minus the measured per-mode
+                # compile surplus, against the warm fused run (DESIGN.md §11).
+                **(
+                    {
+                        "fused_warm_s": m["fused_warm_wall_s"],
+                        "fused_speedup": (
+                            m["wall_s"]
+                            - sum(
+                                max(mm["first_s"] - mm["steady_s"], 0.0)
+                                for mm in m["modes"]
+                            )
+                        )
+                        / m["fused_warm_wall_s"],
+                    }
+                    if m.get("fused_warm_wall_s")
+                    else {}
+                ),
             }
         )
     lines.append("## Measured CP-ALS runs (steady-state ms per mode)\n")

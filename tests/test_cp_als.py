@@ -1,10 +1,14 @@
-"""CP-ALS driver behaviour: fit recovery on synthetic low-rank tensors."""
+"""CP-ALS driver behaviour: fit recovery, numerics regressions, and the
+fused executor's equivalence with the eager driver (DESIGN.md §11)."""
+
+import dataclasses
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core.cp_als import cp_als, reconstruct_values
+from repro.core.cp_als_fused import FUSED_FIT_TOL, FusedCPALS, cp_als_fused
 from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
 
 
@@ -51,3 +55,129 @@ def test_4mode_als_runs():
     state = cp_als(t, rank=4, n_iters=3)
     assert len(state.factors) == 4
     assert all(np.isfinite(np.asarray(f)).all() for f in state.factors)
+
+
+# --- numerics regressions ---------------------------------------------------
+
+
+def test_all_zero_tensor_fit_is_zero_not_nan():
+    """||X|| = 0 used to yield sqrt(0)/sqrt(0) = NaN fits that silently
+    poisoned the convergence check."""
+    t = random_sparse_tensor((10, 8, 6), nnz=40, seed=3)
+    t0 = dataclasses.replace(t, values=np.zeros_like(t.values))
+    state = cp_als(t0, rank=3, n_iters=2, tol=0.0)
+    assert state.fit == 0.0
+    assert all(np.isfinite(state.fits)) and all(f == 0.0 for f in state.fits)
+
+
+def test_cp_als_refuses_empty_tensor():
+    empty = SparseTensor(
+        np.zeros((0, 3), np.int32), np.zeros((0,), np.float32), (4, 4, 4)
+    )
+    with pytest.raises(ValueError, match="at least one nonzero"):
+        cp_als(empty, rank=2)
+    with pytest.raises(ValueError, match="at least one nonzero"):
+        cp_als(empty, rank=2, fused=True)
+    with pytest.raises(ValueError, match="at least one nonzero"):
+        FusedCPALS(empty, 2)
+
+
+def test_cp_als_dtype_plumbed_mixed_precision():
+    """dtype= reaches cp_init and the whole loop runs with reduced-precision
+    factors against fp32 values (previously unreachable from cp_als)."""
+    t = random_sparse_tensor((14, 12, 10), nnz=200, seed=4)
+    state32 = cp_als(t, rank=4, n_iters=3, tol=0.0, seed=1)
+    state16 = cp_als(t, rank=4, n_iters=3, tol=0.0, seed=1, dtype=jnp.bfloat16)
+    assert all(f.dtype == jnp.bfloat16 for f in state16.factors)
+    assert state16.weights.dtype == jnp.bfloat16
+    assert all(np.isfinite(state16.fits))
+    # Same seeds, same math at different storage precision: trajectories
+    # agree loosely (bf16 has ~3 decimal digits).
+    assert abs(state16.fit - state32.fit) < 0.1
+    # Default dtype is unchanged fp32.
+    assert all(f.dtype == jnp.float32 for f in state32.factors)
+
+
+def test_fused_dtype_plumbed():
+    t = random_sparse_tensor((14, 12, 10), nnz=200, seed=4)
+    res = cp_als_fused(t, 4, n_iters=2, tol=0.0, dtype=jnp.bfloat16)
+    assert all(f.dtype == jnp.bfloat16 for f in res.state.factors)
+    assert all(np.isfinite(res.state.fits))
+
+
+# --- fused executor equivalence (DESIGN.md §11) ------------------------------
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas", "sharded"])
+def test_fused_matches_eager_fit_trajectory(impl):
+    """Same seeds => same trajectories per impl, within the documented
+    float-summation tolerance (one fused XLA program may re-associate
+    sums the eager per-op dispatch kept separate)."""
+    t = random_sparse_tensor((30, 25, 20), nnz=600, seed=0)
+    eager = cp_als(t, rank=4, n_iters=4, tol=0.0, seed=2, impl=impl)
+    fused = cp_als(t, rank=4, n_iters=4, tol=0.0, seed=2, impl=impl, fused=True)
+    assert len(fused.fits) == len(eager.fits)
+    np.testing.assert_allclose(fused.fits, eager.fits, atol=FUSED_FIT_TOL)
+    for fe, ff in zip(eager.factors, fused.factors):
+        np.testing.assert_allclose(np.asarray(ff), np.asarray(fe), atol=1e-3)
+
+
+def test_fused_fit_every_cadence_same_trajectory():
+    """fit_every only changes WHEN the host syncs, never the math: the
+    trajectory is identical, the sync count drops."""
+    t = random_sparse_tensor((20, 16, 12), nnz=300, seed=6)
+    r1 = cp_als_fused(t, 4, n_iters=5, tol=0.0, seed=1, fit_every=1)
+    r2 = cp_als_fused(t, 4, n_iters=5, tol=0.0, seed=1, fit_every=2)
+    np.testing.assert_allclose(r1.fits, r2.fits, atol=1e-6)
+    assert r1.sync_count == 5
+    assert r2.sync_count == 3  # ceil(5 / 2)
+
+
+def test_fused_early_stop_matches_eager_at_unit_cadence():
+    t = _low_rank_sparse((12, 10, 8), rank=2, seed=1)
+    eager = cp_als(t, rank=3, n_iters=30, tol=1e-4, seed=0)
+    fused = cp_als(t, rank=3, n_iters=30, tol=1e-4, seed=0, fused=True)
+    assert fused.iters == eager.iters
+    np.testing.assert_allclose(fused.fits, eager.fits, atol=FUSED_FIT_TOL)
+
+
+def test_fused_multi_restart_shapes_and_selection():
+    t = random_sparse_tensor((18, 14, 10), nnz=250, seed=8)
+    res = cp_als_fused(t, 4, n_iters=3, tol=0.0, seed=7, restarts=3)
+    assert res.fits.shape == (3, 3)
+    assert res.seeds == (7, 8, 9)
+    assert res.best_restart == int(np.argmax(res.fits[:, -1]))
+    assert res.state.fit == max(res.final_fits)
+    # The vmap batch reproduces the single-seed runs exactly (same
+    # cp_init draws, same math, batched along the restart axis).
+    singles = [
+        cp_als_fused(t, 4, n_iters=3, tol=0.0, seed=s).state.fit for s in res.seeds
+    ]
+    np.testing.assert_allclose(res.final_fits, singles, atol=FUSED_FIT_TOL)
+
+
+def test_fused_executor_reuse_and_restart_batch_consistency():
+    t = random_sparse_tensor((18, 14, 10), nnz=250, seed=8)
+    executor = FusedCPALS(t, 4)
+    a = executor.run(n_iters=2, tol=0.0, seed=0)
+    b = executor.run(n_iters=2, tol=0.0, seed=0)  # reused buffers + jit cache
+    np.testing.assert_array_equal(a.fits, b.fits)
+    batched = executor.run(n_iters=2, tol=0.0, seeds=(0, 5))
+    np.testing.assert_allclose(batched.fits[0], a.fits[0], atol=FUSED_FIT_TOL)
+
+
+def test_fused_rejects_bad_args():
+    t = random_sparse_tensor((10, 8, 6), nnz=50, seed=0)
+    with pytest.raises(ValueError, match="unknown impl"):
+        FusedCPALS(t, 2, impl="nope")
+    with pytest.raises(ValueError, match="restarts"):
+        cp_als(t, rank=2, restarts=4)  # batching requires fused=True
+    with pytest.raises(ValueError, match="fit_every"):
+        cp_als(t, rank=2, fit_every=3)  # sync cadence requires fused=True
+    with pytest.raises(ValueError, match="mttkrp_fn"):
+        cp_als(t, rank=2, fused=True, mttkrp_fn=lambda t, f, m: None)
+    ex = FusedCPALS(t, 2)
+    with pytest.raises(ValueError, match="fit_every"):
+        ex.run(fit_every=0)
+    with pytest.raises(ValueError, match="n_iters"):
+        ex.run(n_iters=0)

@@ -278,3 +278,26 @@ def test_measure_cp_als_pallas_agrees_with_ref_fit():
     ref = measure_cp_als(t, name="tiny", impl="ref", n_iters=2, cost_analysis=False)
     pal = measure_cp_als(t, name="tiny", impl="pallas", n_iters=2, cost_analysis=False)
     assert abs(ref.fit - pal.fit) < 1e-3
+    # Without fused=, the fused timing fields stay unset (and absent
+    # fields round-trip through the artifact dict).
+    assert ref.fused_wall_s is None and ref.fused_warm_wall_s is None
+    from repro.experiments.measure import MeasuredRun
+
+    rt = MeasuredRun.from_dict(ref.to_dict())
+    assert rt.fused_wall_s is None
+
+
+def test_measure_cp_als_fused_timing_fields():
+    from repro.core.cp_als_fused import FUSED_FIT_TOL
+
+    t = make_frostt_like("NELL-2", scale=5e-5, seed=1)
+    run = measure_cp_als(
+        t, name="tiny", impl="ref", n_iters=2, cost_analysis=False, fused=True
+    )
+    assert run.fused_wall_s > 0 and run.fused_warm_wall_s > 0
+    # Cold includes plan build + trace/compile, warm reuses both.
+    assert run.fused_warm_wall_s <= run.fused_wall_s
+    # Same seeds => fused trajectory matches the eager one within the
+    # documented float-summation tolerance.
+    assert run.fused_max_fit_delta <= FUSED_FIT_TOL
+    assert abs(run.fused_fit - run.fit) <= FUSED_FIT_TOL

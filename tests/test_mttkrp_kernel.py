@@ -176,3 +176,42 @@ def test_plan_properties():
     np.testing.assert_array_equal(
         plan.local_row, plan.sorted_indices[:, 0] - blk * plan.rows_per_block
     )
+
+
+def test_from_plan_path_builds_no_tensor_and_matches_ref():
+    """The plan-only entry point slices from plan.shape[plan.mode] and
+    never constructs a SparseTensor (the historical dummy-tensor shim
+    allocated one per call in the distributed per-shard hot loop)."""
+    from repro.kernels.mttkrp import mttkrp_pallas_from_plan
+
+    t = random_sparse_tensor((40, 30, 20), nnz=400, seed=21)
+    rng = np.random.default_rng(0)
+    facs = [jnp.asarray(rng.random((s, 8), np.float32)) for s in t.shape]
+    for mode in range(3):
+        plan = build_mttkrp_plan(t, mode, tile_nnz=64, rows_per_block=8)
+        got = np.asarray(mttkrp_pallas_from_plan(plan, facs, interpret=True))
+        want = np.asarray(mttkrp_ref(t, facs, mode))
+        assert got.shape == (t.shape[mode], 8)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_plan_device_buffers_uploaded_once():
+    """Plan operands are device-memoized per plan object: every CP-ALS
+    iteration reuses the same buffers instead of re-staging them."""
+    from repro.kernels.mttkrp import plan_device_buffers
+
+    t = random_sparse_tensor((40, 30, 20), nnz=200, seed=22)
+    plan = build_mttkrp_plan(t, 0, tile_nnz=64, rows_per_block=8)
+    a = plan_device_buffers(plan)
+    b = plan_device_buffers(plan)
+    assert a is b
+    for buf, host in [
+        (a.indices, plan.sorted_indices),
+        (a.values, plan.sorted_values),
+        (a.local_row, plan.local_row),
+        (a.tile_block, plan.tile_block),
+    ]:
+        np.testing.assert_array_equal(np.asarray(buf), host)
+    # A distinct plan (even with identical contents) gets its own buffers.
+    plan2 = build_mttkrp_plan(t, 0, tile_nnz=64, rows_per_block=8)
+    assert plan_device_buffers(plan2) is not a
