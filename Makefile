@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder cp-als
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +29,18 @@ reorder:
 # strictly faster everywhere and fit trajectories match (DESIGN.md §11).
 cp-als:
 	$(PY) scripts/run_cp_als.py --out BENCH_cp_als.json
+
+# Decomposition service (repro.serve): batch-size throughput scaling +
+# open-loop latency percentiles + parity audit -> BENCH_serve.json;
+# exits nonzero unless throughput strictly increases with bucket batch
+# size and every served response matches standalone fused CP-ALS
+# (DESIGN.md §12).
+serve:
+	$(PY) scripts/run_serve.py --out BENCH_serve.json
+
+# CI smoke: same gates on a small RNG-pinned traffic trace.
+serve-smoke:
+	$(PY) scripts/run_serve.py --quick --out /tmp/BENCH_serve_smoke.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

@@ -1,0 +1,242 @@
+#!/usr/bin/env python
+"""Decomposition-service benchmark driver (repro.serve, DESIGN.md §12).
+
+Three phases, one committed artifact (``BENCH_serve.json``):
+
+  1. **batch scaling** — a homogeneous (single-bucket) closed-loop trace
+     drained at bucket batch sizes 1 / 4 / 8; best-of-``--repeats`` wall
+     time per size → requests/s.
+  2. **open loop** — a heterogeneous Poisson trace replayed open-loop
+     through the service; p50/p99 latency, queue depth, throughput and
+     backpressure counters from the service's metrics ring.
+  3. **parity audit** — every open-loop response re-run standalone
+     (``cp_als(..., fused=True)``, same tensor/seed); max fit-trajectory
+     delta must stay within ``FUSED_FIT_TOL``.
+
+Usage:
+    python scripts/run_serve.py                          # make serve
+    python scripts/run_serve.py --quick --out /tmp/...   # make serve-smoke
+
+Acceptance gate (exit nonzero on violation):
+  * throughput strictly increases with bucket batch size (1 → 4 → 8);
+  * p50/p99 latency fields are present and positive;
+  * the parity audit holds on every served response.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core.cp_als import cp_als
+from repro.core.cp_als_fused import FUSED_FIT_TOL
+from repro.serve import (
+    DecompositionService,
+    TrafficConfig,
+    bucket_signature,
+    replay_trace,
+    synthetic_trace,
+)
+
+BATCH_SIZES = (1, 4, 8)
+
+# The scaling phase pins the dispatch-overhead-dominated tenant regime
+# where bucket batching pays (DESIGN.md §12 discusses the compute-bound
+# other end): ~800-nnz tensors, 4 sweeps, one bucket.
+SCALING_TRAFFIC = dict(
+    dim_jitter=0.05, base_dims=(48, 40, 36), nnz_range=(700, 900), ranks=(8,), n_iters=4
+)
+
+
+def _timed_drain_s(trace, *, max_batch: int, max_inflight: int) -> float:
+    svc = DecompositionService(max_batch=max_batch, max_inflight=max_inflight)
+    t0 = time.perf_counter()
+    for _, req in trace:
+        svc.submit(req)
+    svc.run_until_drained()
+    return time.perf_counter() - t0
+
+
+def _scaling_walls_s(trace, *, max_inflight: int, repeats: int) -> dict[int, float]:
+    """Best-of-``repeats`` closed-loop drain wall per batch size.
+
+    Batch sizes are measured round-robin WITHIN each repeat round (not one
+    size at a time) so slow machine phases — GC, thermal, a noisy
+    neighbor — hit every size equally instead of biasing whichever size
+    happened to run during them.
+    """
+    for mb in BATCH_SIZES:  # warm-up drains compile each bucket program
+        warm = DecompositionService(max_batch=mb, max_inflight=max_inflight)
+        for _, req in trace[:mb]:
+            warm.submit(req)
+        warm.run_until_drained()
+    best = {mb: float("inf") for mb in BATCH_SIZES}
+    for _ in range(repeats):
+        for mb in BATCH_SIZES:
+            wall = _timed_drain_s(trace, max_batch=mb, max_inflight=max_inflight)
+            best[mb] = min(best[mb], wall)
+    return best
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--requests", type=int, default=32, help="scaling-trace size")
+    ap.add_argument("--open-requests", type=int, default=24, help="open-loop trace size")
+    ap.add_argument("--repeats", type=int, default=4, help="scaling drain repeats (best-of)")
+    ap.add_argument("--max-inflight", type=int, default=2)
+    ap.add_argument(
+        "--mean-interarrival-ms", type=float, default=4.0, help="open-loop Poisson rate"
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true", help="CI smoke: small traces, 2 repeats")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    # The scaling trace must divide evenly by every batch size: a ragged
+    # tail batch is padded to max_batch, and its wasted pad-slot compute
+    # would penalize exactly the batch sizes the gate is measuring.
+    n_scaling = args.requests
+    if n_scaling % max(BATCH_SIZES):
+        raise SystemExit(f"--requests must be a multiple of {max(BATCH_SIZES)}")
+    n_open = 10 if args.quick else args.open_requests
+    repeats = 3 if args.quick else args.repeats
+
+    # -- phase 1: throughput vs bucket batch size (closed loop) -------------
+    scaling_cfg = TrafficConfig(n_requests=n_scaling, seed=args.seed, **SCALING_TRAFFIC)
+    scaling_trace = synthetic_trace(scaling_cfg)
+    n_buckets = len({bucket_signature(r) for _, r in scaling_trace})
+    if n_buckets != 1:
+        print(f"FAIL: scaling trace must be single-bucket, got {n_buckets} buckets")
+        return 1
+    walls = _scaling_walls_s(
+        scaling_trace, max_inflight=args.max_inflight, repeats=repeats
+    )
+    scaling = []
+    for mb in BATCH_SIZES:
+        row = {
+            "max_batch": mb,
+            "requests": n_scaling,
+            "wall_s": walls[mb],
+            "throughput_req_s": n_scaling / walls[mb],
+        }
+        scaling.append(row)
+        print(
+            f"[scaling] max_batch={mb}: {walls[mb] * 1e3:8.1f} ms "
+            f"-> {row['throughput_req_s']:7.1f} req/s"
+        )
+
+    # -- phase 2: heterogeneous open-loop replay ----------------------------
+    open_cfg = TrafficConfig(
+        n_requests=n_open,
+        mean_interarrival_s=args.mean_interarrival_ms * 1e-3,
+        seed=args.seed + 1,
+    )
+    open_trace = synthetic_trace(open_cfg)
+    # Precompile every bucket program off the clock (a closed-loop drain
+    # through a throwaway service) — a production service warms its
+    # buckets at deploy time, and a 10-request smoke trace would
+    # otherwise report XLA compile time as tail latency.
+    warm = DecompositionService(
+        max_batch=max(BATCH_SIZES), max_inflight=args.max_inflight
+    )
+    for _, req in open_trace:
+        warm.submit(req)
+    warm.run_until_drained()
+    svc = DecompositionService(max_batch=max(BATCH_SIZES), max_inflight=args.max_inflight)
+    t0 = time.perf_counter()
+    responses = replay_trace(svc, open_trace)
+    open_wall = time.perf_counter() - t0
+    latency = svc.metrics.summary("latency_s")
+    queue_wait = svc.metrics.summary("queue_wait_s")
+    queue_depth = svc.metrics.summary("queue_depth")
+    open_loop = {
+        "requests": n_open,
+        "mean_interarrival_s": open_cfg.mean_interarrival_s,
+        "buckets": len({bucket_signature(r) for _, r in open_trace}),
+        "completed": len(responses),
+        "rejected": svc.rejected,
+        "wall_s": open_wall,
+        "throughput_req_s": len(responses) / open_wall,
+        "latency_s": latency,
+        "queue_wait_s": queue_wait,
+        "queue_depth": queue_depth,
+    }
+    print(
+        f"[open-loop] {len(responses)}/{n_open} served over {open_loop['buckets']} "
+        f"buckets in {open_wall * 1e3:.1f} ms "
+        f"({open_loop['throughput_req_s']:.1f} req/s) | latency p50 "
+        f"{latency['p50'] * 1e3:.1f} ms p99 {latency['p99'] * 1e3:.1f} ms"
+    )
+
+    # -- phase 3: parity audit vs standalone fused CP-ALS -------------------
+    max_delta = 0.0
+    for _, req in open_trace:
+        ref = cp_als(
+            req.tensor, req.rank, n_iters=req.n_iters, tol=0.0, seed=req.seed, fused=True
+        )
+        got = responses[req.request_id].state
+        max_delta = max(
+            max_delta, float(np.max(np.abs(np.asarray(got.fits) - np.asarray(ref.fits))))
+        )
+    parity_ok = max_delta <= FUSED_FIT_TOL
+    print(
+        f"[parity] {len(open_trace)} responses vs standalone fused: "
+        f"max fit delta {max_delta:.2e} (tol {FUSED_FIT_TOL})"
+    )
+
+    # -- artifact + gate -----------------------------------------------------
+    throughputs = [row["throughput_req_s"] for row in scaling]
+    scaling_ok = all(b > a for a, b in zip(throughputs, throughputs[1:]))
+    latency_ok = (
+        latency.get("count", 0) > 0 and latency["p50"] > 0.0 and latency["p99"] > 0.0
+    )
+    payload = {
+        "benchmark": "serve",
+        "config": {
+            "quick": args.quick,
+            "scaling_traffic": {**SCALING_TRAFFIC, "n_requests": n_scaling},
+            "repeats": repeats,
+            "max_inflight": args.max_inflight,
+            "seed": args.seed,
+        },
+        "fit_tol": FUSED_FIT_TOL,
+        "scaling": scaling,
+        "open_loop": open_loop,
+        "parity": {"max_fit_delta": max_delta, "ok": parity_ok},
+        "scaling_ok": scaling_ok,
+        "latency_ok": latency_ok,
+    }
+    Path(args.out).write_text(json.dumps(payload, indent=2))
+    print(f"\nwrote {args.out}")
+
+    ok = True
+    if not scaling_ok:
+        print(
+            "FAIL: throughput not strictly increasing with batch size: "
+            + ", ".join(f"{mb}->{t:.1f}" for mb, t in zip(BATCH_SIZES, throughputs))
+        )
+        ok = False
+    if not latency_ok:
+        print(f"FAIL: open-loop latency percentiles missing/empty: {latency}")
+        ok = False
+    if not parity_ok:
+        print(f"FAIL: parity audit out of tolerance: {max_delta:.2e} > {FUSED_FIT_TOL}")
+        ok = False
+    if ok:
+        print(
+            f"gate OK: throughput {throughputs[0]:.1f} -> {throughputs[-1]:.1f} req/s "
+            f"(batch {BATCH_SIZES[0]} -> {BATCH_SIZES[-1]}), p50/p99 reported, "
+            f"parity within {FUSED_FIT_TOL}"
+        )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,7 @@ enforce (tests/test_cp_als.py, scripts/run_cp_als.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import jax
@@ -46,7 +47,13 @@ from repro.core.cp_als import CPState, _fit, _mode_update, cp_init
 from repro.core.mttkrp import mttkrp_ref
 from repro.core.sparse_tensor import SparseTensor
 
-__all__ = ["FUSED_FIT_TOL", "BatchedCPState", "FusedCPALS", "cp_als_fused"]
+__all__ = [
+    "FUSED_FIT_TOL",
+    "BatchedCPState",
+    "FusedCPALS",
+    "MultiTensorCPALS",
+    "cp_als_fused",
+]
 
 # Documented fused-vs-eager fit tolerance: same seeds, same math, but one
 # fused XLA program may re-associate float summations the eager per-op
@@ -113,12 +120,16 @@ class FusedCPALS:
         self.ordering = ordering
         self.nmodes = tensor.nmodes
         compute_dtype = jnp.promote_types(dtype, jnp.float32)
-        # Fit operands (raw COO order, exactly what the eager driver uses).
-        self._indices = jnp.asarray(tensor.indices)
-        self._values = jnp.asarray(tensor.values).astype(compute_dtype)
-        self._norm2 = jnp.asarray(
-            float((tensor.values.astype(np.float64) ** 2).sum()), dtype=compute_dtype
-        )
+        # Fit operands (raw COO order, exactly what the eager driver
+        # uses), from the per-tensor device memo: executors and serving
+        # buckets built over the same tensor re-upload nothing
+        # (kernels/mttkrp/ops.tensor_device_operands, DESIGN.md §12).
+        from repro.kernels.mttkrp.ops import tensor_device_operands
+
+        ops = tensor_device_operands(tensor, dtype=compute_dtype)
+        self._indices = ops.indices
+        self._values = ops.values
+        self._norm2 = ops.norm2
         self._sweep_cache: dict[tuple[int, bool], callable] = {}
 
         if impl == "ref":
@@ -320,6 +331,98 @@ class FusedCPALS:
             seeds=seeds,
             fits=fits_mat,
             sync_count=syncs,
+        )
+
+
+@functools.lru_cache(maxsize=128)
+def _multi_tensor_sweep(shape: tuple[int, ...], length: int):
+    """Jitted multi-tensor fused sweep program for one padded geometry.
+
+    The FusedCPALS sweep vmapped over a batch of DISTINCT tensors: the
+    COO operands (indices, values, norm2) join the factors as batched
+    arguments instead of captured constants.  Cached at module level by
+    (padded shape, sweep length) — every service instance, bucket and
+    test that shares a geometry shares one jit wrapper and therefore one
+    XLA compile cache entry per (batch, nnz_pad, rank) shape
+    (repro.serve, DESIGN.md §12).
+    """
+    nmodes = len(shape)
+
+    def sweep(indices, values, norm2, factors, weights):
+        def body(carry, _):
+            factors, weights = carry
+            for mode in range(nmodes):  # unrolled at trace time
+                m = mttkrp_ref((indices, values, shape), factors, mode)
+                factors, weights = _mode_update(factors, weights, m, mode)
+            fit = _fit(norm2, indices, values, factors, weights)
+            return (factors, weights), fit
+
+        (factors, weights), fits = lax.scan(
+            body, (factors, weights), None, length=length
+        )
+        return factors, weights, fits
+
+    return jax.jit(jax.vmap(sweep))
+
+
+class MultiTensorCPALS:
+    """Fused CP-ALS over a batch of DISTINCT tensors with one geometry.
+
+    ``FusedCPALS`` batches restarts of ONE tensor (operands are captured
+    constants); this executor batches *different* tensors that share a
+    padded geometry — the multi-tenant serving case (repro.serve,
+    DESIGN.md §12).  All tensors in a batch must be padded to the same
+    ``(shape, nnz_pad)`` and their factors to the same rank; zero-row /
+    zero-column / zero-value padding is exactly result-preserving (the
+    parity argument is spelled out in DESIGN.md §12 and enforced by
+    tests/test_serve.py against standalone ``cp_als(..., fused=True)``).
+
+    Ref-impl math only: the pallas/sharded paths build per-tensor plans
+    and partitions, which cannot be batched across distinct tensors.
+    """
+
+    def __init__(self, shape: Sequence[int], *, nnz_pad: int, rank: int) -> None:
+        if nnz_pad < 1:
+            raise ValueError(f"nnz_pad must be >= 1, got {nnz_pad}")
+        if rank < 1:
+            raise ValueError(f"rank must be >= 1, got {rank}")
+        self.shape = tuple(int(s) for s in shape)
+        self.nmodes = len(self.shape)
+        self.nnz_pad = int(nnz_pad)
+        self.rank = int(rank)
+
+    def run_batch(
+        self,
+        indices: jax.Array,  # (B, nnz_pad, nmodes) int32
+        values: jax.Array,  # (B, nnz_pad)
+        norm2: jax.Array,  # (B,)
+        factors: Sequence[jax.Array],  # per mode: (B, I_k_pad, rank)
+        *,
+        n_iters: int,
+    ) -> tuple[tuple[jax.Array, ...], jax.Array, jax.Array]:
+        """Run ``n_iters`` fused sweeps on every tensor in the batch.
+
+        Returns ``(factors, weights, fits)`` with ``fits`` of shape
+        ``(B, n_iters)``.  Dispatch is asynchronous — nothing blocks
+        until the caller reads a result, which is what lets the service
+        keep multiple batches in flight (DESIGN.md §12).
+        """
+        if n_iters < 1:
+            raise ValueError(f"n_iters must be >= 1, got {n_iters}")
+        if indices.shape[1:] != (self.nnz_pad, self.nmodes):
+            raise ValueError(
+                f"indices shape {indices.shape} does not match geometry "
+                f"(B, {self.nnz_pad}, {self.nmodes})"
+            )
+        for k, f in enumerate(factors):
+            if f.shape[1:] != (self.shape[k], self.rank):
+                raise ValueError(
+                    f"factor {k} shape {f.shape} does not match geometry "
+                    f"(B, {self.shape[k]}, {self.rank})"
+                )
+        weights = jnp.ones((indices.shape[0], self.rank), factors[0].dtype)
+        return _multi_tensor_sweep(self.shape, int(n_iters))(
+            indices, values, norm2, tuple(factors), weights
         )
 
 

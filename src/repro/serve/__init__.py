@@ -1,0 +1,34 @@
+"""Decomposition-as-a-service: multi-tenant batched CP-ALS serving
+(DESIGN.md §12).
+
+``DecompositionService`` admits heterogeneous CP-ALS requests, buckets
+them by padded geometry signature, and serves each bucket through one
+compiled multi-tensor fused program
+(``repro.core.cp_als_fused.MultiTensorCPALS``) with bounded in-flight
+batches; ``repro.serve.traffic`` generates RNG-pinned open-loop load.
+Every served response is parity-guaranteed against a standalone
+``cp_als(..., fused=True)`` run (tests/test_serve.py,
+scripts/run_serve.py).
+"""
+
+from repro.serve.service import (
+    BucketExecutor,
+    BucketSignature,
+    DecompRequest,
+    DecompResponse,
+    DecompositionService,
+    bucket_signature,
+)
+from repro.serve.traffic import TrafficConfig, replay_trace, synthetic_trace
+
+__all__ = [
+    "BucketExecutor",
+    "BucketSignature",
+    "DecompRequest",
+    "DecompResponse",
+    "DecompositionService",
+    "bucket_signature",
+    "TrafficConfig",
+    "replay_trace",
+    "synthetic_trace",
+]

@@ -1,0 +1,452 @@
+"""Decomposition-as-a-service: multi-tenant batched CP-ALS (DESIGN.md §12).
+
+The unit of scale stops being one tensor and becomes a request stream:
+heterogeneous CP-ALS requests (tensor, rank, iters, seed) are admitted
+into a bounded queue, bucketed by a padded **geometry signature**
+``(shape bands, nnz band, rank band, iters)``, padded to the bucket
+geometry, and executed by one compiled multi-tensor fused program per
+bucket (``repro.core.cp_als_fused.MultiTensorCPALS``).  Dispatch is
+asynchronous with a fixed set of in-flight batch slots recycled in the
+style of ``runtime.serve_loop.BatchServer``.
+
+Padding is exactly result-preserving (the §12 parity argument):
+
+  * **nnz padding** — value-0.0 entries at coordinate 0 add IEEE-exact
+    zeros to both MTTKRP and the fit inner product;
+  * **row padding** — output rows past the true dim receive an all-zero
+    MTTKRP, solve to zero, and contribute nothing to grams or norms;
+  * **rank padding** — zero factor columns zero their gram rows/columns,
+    so the ridge-stabilized solve reproduces the true-rank block
+    bit-for-bit and the padded weights (clamped to 1e-12) multiply only
+    zeros in the fit.
+
+Every served response therefore matches a standalone
+``cp_als(tensor, rank, fused=True, tol=0.0)`` run on the same seed
+within ``FUSED_FIT_TOL`` — the differential guarantee enforced by
+tests/test_serve.py and the ``BENCH_serve.json`` parity audit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cp_als import CPState, cp_init
+from repro.core.cp_als_fused import MultiTensorCPALS
+from repro.core.sparse_tensor import SparseTensor
+from repro.kernels.mttkrp.ops import tensor_device_operands
+from repro.runtime.metrics import MetricsLogger
+
+__all__ = [
+    "DecompRequest",
+    "DecompResponse",
+    "BucketSignature",
+    "bucket_signature",
+    "DecompositionService",
+]
+
+
+# -- requests / responses ---------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DecompRequest:
+    """One tenant's decomposition job.
+
+    ``n_iters`` is a fixed sweep budget (the service runs exactly that
+    many ALS sweeps, ``tol=0.0`` semantics): batched early stopping
+    would couple one tenant's convergence to its batch peers'.
+    """
+
+    request_id: str
+    tensor: SparseTensor
+    rank: int
+    n_iters: int = 10
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.tensor.nnz == 0:
+            raise ValueError(
+                f"request {self.request_id!r}: cp_als requires a tensor with "
+                "at least one nonzero"
+            )
+        if self.rank < 1:
+            raise ValueError(f"request {self.request_id!r}: rank must be >= 1")
+        if self.n_iters < 1:
+            raise ValueError(f"request {self.request_id!r}: n_iters must be >= 1")
+
+
+@dataclasses.dataclass
+class DecompResponse:
+    """Served result: the standalone driver's ``CPState`` (factors
+    trimmed back to the request's true dims/rank) plus serving metadata."""
+
+    request_id: str
+    signature: "BucketSignature"
+    state: CPState
+    batch_size: int  # real requests in the dispatched batch (pad slots excluded)
+    arrival_t: float
+    dispatch_t: float
+    complete_t: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.complete_t - self.arrival_t
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.dispatch_t - self.arrival_t
+
+    @property
+    def service_s(self) -> float:
+        return self.complete_t - self.dispatch_t
+
+
+# -- bucketing signature ----------------------------------------------------
+
+
+def _next_pow2(n: int, floor: int) -> int:
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class BucketSignature:
+    """Padded geometry key: requests with equal signatures share one
+    compiled program and one batch.  ``n_iters`` is part of the key
+    because the fused scan length is baked into the compiled sweep."""
+
+    dims: tuple[int, ...]  # padded per-mode sizes (power-of-two bands)
+    nnz_pad: int  # padded nonzero count (power-of-two band)
+    rank_pad: int  # padded rank (power-of-two band)
+    n_iters: int
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.dims)
+
+
+def bucket_signature(
+    req: DecompRequest,
+    *,
+    dim_floor: int = 8,
+    nnz_floor: int = 64,
+    rank_floor: int = 4,
+) -> BucketSignature:
+    """Quantize a request onto its bucket's padded geometry.
+
+    Power-of-two banding bounds both the padding waste (< 2x per axis)
+    and the number of distinct compiled programs (log in each axis) —
+    the classic bucketing trade every shape-specialized serving system
+    makes.  The floors keep degenerate tiny requests from fragmenting
+    into single-request buckets.
+    """
+    return BucketSignature(
+        dims=tuple(_next_pow2(d, dim_floor) for d in req.tensor.shape),
+        nnz_pad=_next_pow2(req.tensor.nnz, nnz_floor),
+        rank_pad=_next_pow2(req.rank, rank_floor),
+        n_iters=int(req.n_iters),
+    )
+
+
+# -- per-bucket padded execution -------------------------------------------
+
+
+def _pad_factor(f: jax.Array, rows: int, cols: int) -> jax.Array:
+    return jnp.pad(f, ((0, rows - f.shape[0]), (0, cols - f.shape[1])))
+
+
+class BucketExecutor:
+    """Pads and runs one signature's batches on the shared multi-tensor
+    fused program.  Construction is cheap (the compiled program lives in
+    the module-level ``_multi_tensor_sweep`` cache keyed by geometry);
+    per-request operands come from the ``tensor_device_operands`` memo,
+    so a re-submitted tensor re-stages nothing."""
+
+    def __init__(self, signature: BucketSignature, *, dtype=jnp.float32) -> None:
+        self.signature = signature
+        self.dtype = dtype
+        self.core = MultiTensorCPALS(
+            signature.dims, nnz_pad=signature.nnz_pad, rank=signature.rank_pad
+        )
+
+    def launch(self, requests: Sequence[DecompRequest], *, pad_to: int):
+        """Asynchronously dispatch one padded batch; returns device arrays.
+
+        ``pad_to`` fixes the batch axis so every dispatch of this bucket
+        reuses one compiled program: short batches are filled with
+        **pad slots** replaying request 0's operands, whose results are
+        dropped at completion (pad-slot exclusion, tests/test_serve.py).
+        """
+        sig = self.signature
+        if not 0 < len(requests) <= pad_to:
+            raise ValueError(f"batch size {len(requests)} not in (0, {pad_to}]")
+        ops = [
+            tensor_device_operands(r.tensor, nnz_pad=sig.nnz_pad, dtype=self.dtype)
+            for r in requests
+        ]
+        inits = [
+            [
+                _pad_factor(f, sig.dims[k], sig.rank_pad)
+                for k, f in enumerate(
+                    cp_init(r.tensor, r.rank, seed=r.seed, dtype=self.dtype)
+                )
+            ]
+            for r in requests
+        ]
+        pad = pad_to - len(requests)
+        if pad:
+            ops = ops + [ops[0]] * pad
+            inits = inits + [inits[0]] * pad
+        indices = jnp.stack([o.indices for o in ops])
+        values = jnp.stack([o.values for o in ops])
+        norm2 = jnp.stack([o.norm2 for o in ops])
+        factors = tuple(
+            jnp.stack([init[k] for init in inits]) for k in range(sig.nmodes)
+        )
+        return self.core.run_batch(
+            indices, values, norm2, factors, n_iters=sig.n_iters
+        )
+
+
+# -- the service ------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: DecompRequest
+    signature: BucketSignature
+    arrival_t: float
+
+
+@dataclasses.dataclass
+class _InFlight:
+    seq: int
+    signature: BucketSignature
+    pending: list[_Pending]
+    factors: tuple[jax.Array, ...]
+    weights: jax.Array
+    fits: jax.Array
+    dispatch_t: float
+
+    def ready(self) -> bool:
+        return bool(self.fits.is_ready())
+
+
+class DecompositionService:
+    """Bounded-queue, bounded-in-flight batched CP-ALS server.
+
+    The scheduler is ``BatchServer``'s shape transplanted from token
+    slots to batch slots: ``tick()`` first retires finished in-flight
+    batches (freeing their slots), then forms batches FIFO-by-signature
+    from the queue and launches them into free slots.  ``max_inflight``
+    bounds dispatched-but-unread batches (device memory / pipelining),
+    ``max_queue`` bounds admitted-but-undispatched requests
+    (backpressure: ``submit`` returns False instead of growing without
+    bound).  Invariants — no drop, no double answer, in-flight ≤ bound —
+    are exercised by the soak test in tests/test_serve.py.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch: int = 8,
+        max_inflight: int = 2,
+        max_queue: int = 256,
+        dtype=jnp.float32,
+        signature_fn: Callable[[DecompRequest], BucketSignature] = bucket_signature,
+        metrics: MetricsLogger | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ) -> None:
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_batch = max_batch
+        self.max_inflight = max_inflight
+        self.max_queue = max_queue
+        self.dtype = dtype
+        self.signature_fn = signature_fn
+        self.metrics = metrics or MetricsLogger("serve", capacity=4096, quiet=True)
+        self.clock = clock
+
+        self._queue: deque[_Pending] = deque()
+        self._buckets: dict[BucketSignature, BucketExecutor] = {}
+        self._slots: list[_InFlight | None] = [None] * max_inflight
+        self._seq = 0
+        self.completed: dict[str, DecompResponse] = {}
+        self.admitted = 0
+        self.rejected = 0
+
+    # -- request admission --------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def submit(self, request: DecompRequest, *, arrival_t: float | None = None) -> bool:
+        """Admit a request; returns False (backpressure) on a full queue.
+
+        A request id already admitted or answered is a caller bug and
+        raises — silently shadowing it would make "answered exactly
+        once" unverifiable.
+        """
+        request.validate()
+        rid = request.request_id
+        if rid in self.completed or any(
+            p.request.request_id == rid for p in self._queue
+        ) or any(
+            s is not None and any(p.request.request_id == rid for p in s.pending)
+            for s in self._slots
+        ):
+            raise ValueError(f"duplicate request_id {rid!r}")
+        if len(self._queue) >= self.max_queue:
+            self.rejected += 1
+            return False
+        self._queue.append(
+            _Pending(
+                request=request,
+                signature=self.signature_fn(request),
+                arrival_t=self.clock() if arrival_t is None else arrival_t,
+            )
+        )
+        self.admitted += 1
+        return True
+
+    # -- scheduler ----------------------------------------------------------
+
+    def tick(self) -> bool:
+        """One scheduler iteration; returns True while work remains."""
+        retired = self._retire(block=False)
+        launched = 0
+        while self._queue and self._free_slot() is not None:
+            self._launch(*self._next_batch())
+            launched += 1
+        if not retired and not launched and self.in_flight:
+            # All slots busy and nothing finished on its own: block on the
+            # oldest batch so the loop always makes progress.
+            self._retire(block=True, limit=1)
+        return bool(self._queue or self.in_flight)
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> dict[str, DecompResponse]:
+        ticks = 0
+        while self.tick() and ticks < max_ticks:
+            ticks += 1
+        return dict(self.completed)
+
+    # -- internals ----------------------------------------------------------
+
+    def _free_slot(self) -> int | None:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _next_batch(self) -> tuple[list[_Pending], BucketSignature]:
+        """FIFO batch formation: the head of the queue fixes the bucket;
+        up to ``max_batch`` same-signature requests join it (others keep
+        their queue positions)."""
+        sig = self._queue[0].signature
+        batch: list[_Pending] = []
+        keep: deque[_Pending] = deque()
+        while self._queue:
+            p = self._queue.popleft()
+            if p.signature == sig and len(batch) < self.max_batch:
+                batch.append(p)
+            else:
+                keep.append(p)
+        self._queue = keep
+        return batch, sig
+
+    def _launch(self, batch: list[_Pending], sig: BucketSignature) -> None:
+        slot = self._free_slot()
+        assert slot is not None, "caller must hold a free slot"
+        executor = self._buckets.get(sig)
+        if executor is None:
+            executor = self._buckets[sig] = BucketExecutor(sig, dtype=self.dtype)
+        factors, weights, fits = executor.launch(
+            [p.request for p in batch], pad_to=self.max_batch
+        )
+        self._seq += 1
+        self._slots[slot] = _InFlight(
+            seq=self._seq,
+            signature=sig,
+            pending=batch,
+            factors=factors,
+            weights=weights,
+            fits=fits,
+            dispatch_t=self.clock(),
+        )
+
+    def _retire(self, *, block: bool, limit: int | None = None) -> int:
+        """Slot recycling: harvest finished batches oldest-first.
+
+        ``block=False`` retires only batches whose device results are
+        already materialized; ``block=True`` waits for them (bounded by
+        ``limit``).
+        """
+        occupied = sorted(
+            (i for i, s in enumerate(self._slots) if s is not None),
+            key=lambda i: self._slots[i].seq,
+        )
+        retired = 0
+        for i in occupied:
+            if limit is not None and retired >= limit:
+                break
+            inflight = self._slots[i]
+            if not block and not inflight.ready():
+                continue
+            self._complete(inflight)
+            self._slots[i] = None
+            retired += 1
+        return retired
+
+    def _complete(self, inflight: _InFlight) -> None:
+        sig = inflight.signature
+        fits = np.asarray(jax.block_until_ready(inflight.fits), dtype=np.float64)
+        now = self.clock()
+        for i, p in enumerate(inflight.pending):  # pad slots: i >= len(pending)
+            req = p.request
+            state = CPState(
+                factors=[
+                    inflight.factors[k][i, : req.tensor.shape[k], : req.rank]
+                    for k in range(sig.nmodes)
+                ],
+                weights=inflight.weights[i, : req.rank],
+                fit=float(fits[i, -1]),
+                fits=[float(f) for f in fits[i]],
+                iters=sig.n_iters,
+            )
+            resp = DecompResponse(
+                request_id=req.request_id,
+                signature=sig,
+                state=state,
+                batch_size=len(inflight.pending),
+                arrival_t=p.arrival_t,
+                dispatch_t=inflight.dispatch_t,
+                complete_t=now,
+            )
+            assert req.request_id not in self.completed, "answered twice"
+            self.completed[req.request_id] = resp
+            self.metrics.log(
+                len(self.completed),
+                latency_s=resp.latency_s,
+                queue_wait_s=resp.queue_wait_s,
+                service_s=resp.service_s,
+                batch=resp.batch_size,
+                queue_depth=self.queue_depth,
+                rank=req.rank,
+                nnz=req.tensor.nnz,
+            )

@@ -17,6 +17,7 @@ from repro.runtime.checkpoint import (
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.runtime.metrics import MetricsLogger
 from repro.runtime.serve_loop import BatchServer, ServeConfig
 from repro.runtime.train_loop import TrainLoopConfig, train
 
@@ -162,3 +163,112 @@ def test_server_slot_reuse_matches_fresh_decode():
     srv2.submit("b", prompt)
     out2 = {d["id"]: d["tokens"] for d in srv2.run_until_drained()}
     assert out1["b"] == out2["b"]
+
+
+# --- BatchServer slot-recycling edge cases (the decomposition service,
+# --- repro.serve, reuses this admission pattern — DESIGN.md §12) -----------
+
+
+def _tiny_cfg():
+    return reduced_config("internlm2-1.8b", num_layers=1, d_model=32, d_ff=64,
+                          num_heads=2, num_kv_heads=2, head_dim=16, vocab_size=64)
+
+
+def test_batch_server_eos_on_first_decoded_token():
+    """A sequence whose very first generated token is eos must free its
+    slot immediately and the recycled slot must serve the next request."""
+    cfg = _tiny_cfg()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompt = [4, 2]
+    # Probe run discovers the (deterministic, greedy) first generated token.
+    probe = BatchServer(cfg, params, ServeConfig(max_slots=1, max_len=10, eos_id=-1))
+    probe.submit("p", prompt)
+    first_tok = probe.run_until_drained()[0]["tokens"][0]
+
+    srv = BatchServer(cfg, params,
+                      ServeConfig(max_slots=1, max_len=10, eos_id=first_tok))
+    srv.submit("a", prompt)
+    srv.submit("b", prompt)  # must be served by the recycled slot
+    done = {d["id"]: d["tokens"] for d in srv.run_until_drained()}
+    assert done["a"] == [first_tok]
+    assert done["b"] == [first_tok]
+
+
+def test_batch_server_queue_longer_than_slots_bounds_inflight():
+    """7 requests through 2 slots: admission never exceeds max_slots and
+    every queued request is eventually served exactly once."""
+    cfg = _tiny_cfg()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    srv = BatchServer(cfg, params, ServeConfig(max_slots=2, max_len=8, eos_id=-1))
+    for i in range(7):
+        srv.submit(f"q{i}", [1 + i % 5, 2])
+    ticks = 0
+    while (any(srv.slots) or srv.queue) and ticks < 500:
+        srv.tick()
+        assert sum(s is not None for s in srv.slots) <= 2
+        ticks += 1
+    ids = [d["id"] for d in srv.completed]
+    assert sorted(ids) == sorted(f"q{i}" for i in range(7))
+    assert len(ids) == len(set(ids))  # answered exactly once
+
+
+def test_batch_server_all_slots_finish_same_tick():
+    """Identical prompts hit the max_len cap on the same tick: every slot
+    frees simultaneously and the whole next wave is admitted together."""
+    cfg = _tiny_cfg()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    srv = BatchServer(cfg, params, ServeConfig(max_slots=3, max_len=6, eos_id=-1))
+    for i in range(6):
+        srv.submit(f"w{i}", [3, 5])  # same length -> same finish tick
+    waves = []
+    ticks = 0
+    while (any(srv.slots) or srv.queue) and ticks < 500:
+        before = len(srv.completed)
+        srv.tick()
+        finished = len(srv.completed) - before
+        if finished:
+            waves.append(finished)
+        ticks += 1
+    assert waves == [3, 3]  # both waves completed en masse
+    lens = {len(d["tokens"]) for d in srv.completed}
+    assert len(lens) == 1  # every sequence hit the same cap
+
+
+# --- MetricsLogger: bounded ring + percentile summaries --------------------
+
+
+def test_metrics_logger_percentiles_and_summary():
+    log = MetricsLogger("t", quiet=True)
+    for i in range(100):
+        log.log(i, latency=float(i + 1))  # 1..100
+    assert log.percentile("latency", 50) == pytest.approx(50.5)
+    assert log.percentile("latency", 99) == pytest.approx(99.01)
+    s = log.summary("latency")
+    assert s["count"] == 100
+    assert s["min"] == 1.0 and s["max"] == 100.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p99"] == pytest.approx(99.01)
+
+
+def test_metrics_logger_bounded_capacity():
+    log = MetricsLogger("t", capacity=10, quiet=True)
+    for i in range(50):
+        log.log(i, v=float(i))
+    assert len(log.rows) == 10  # ring evicted the oldest rows
+    assert log.total_logged == 50  # lifetime count survives eviction
+    assert log.values("v") == [float(i) for i in range(40, 50)]
+    assert log.summary("v")["count"] == 10
+    with pytest.raises(ValueError, match="capacity"):
+        MetricsLogger("t", capacity=0)
+
+
+def test_metrics_logger_empty_and_heterogeneous_keys():
+    log = MetricsLogger("t", quiet=True)
+    with pytest.raises(ValueError, match="no values"):
+        log.percentile("missing", 50)
+    assert log.summary("missing") == {"count": 0}
+    log.log(0, a=1.0)
+    log.log(1, b=2.0)  # rows need not share keys
+    assert log.values("a") == [1.0]
+    assert log.summary("b")["count"] == 1

@@ -1,0 +1,335 @@
+"""Decomposition service (repro.serve, DESIGN.md §12).
+
+Three layers of guarantees:
+
+  * **differential parity** — every response served through a padded
+    bucket matches a standalone ``cp_als(..., fused=True)`` run on the
+    same tensor/seed within ``FUSED_FIT_TOL`` (pad-slot exclusion,
+    mixed-rank buckets, single-request buckets);
+  * **scheduler invariants** — under pinned traffic with randomized
+    arrival orders: no request dropped, none answered twice, in-flight
+    never exceeds the bound, every admitted request completes;
+  * **plumbing units** — signature banding, operand-memo reuse,
+    backpressure, metrics wiring.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cp_als import cp_als
+from repro.core.cp_als_fused import FUSED_FIT_TOL, MultiTensorCPALS
+from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
+from repro.kernels.mttkrp.ops import tensor_device_operands
+from repro.runtime.metrics import MetricsLogger
+from repro.serve import (
+    DecompRequest,
+    DecompositionService,
+    TrafficConfig,
+    bucket_signature,
+    replay_trace,
+    synthetic_trace,
+)
+from tests.property_compat import given, settings, st
+
+
+def _request(i, dims=(19, 15, 12), nnz=120, rank=4, n_iters=2, seed=None, tseed=None):
+    tensor = random_sparse_tensor(dims, nnz, seed=i if tseed is None else tseed)
+    return DecompRequest(
+        request_id=f"r{i}",
+        tensor=tensor,
+        rank=rank,
+        n_iters=n_iters,
+        seed=i * 7 + 1 if seed is None else seed,
+    )
+
+
+def _standalone(req):
+    return cp_als(
+        req.tensor, req.rank, n_iters=req.n_iters, tol=0.0, seed=req.seed, fused=True
+    )
+
+
+def _assert_parity(resp, req):
+    ref = _standalone(req)
+    delta = np.max(np.abs(np.asarray(resp.state.fits) - np.asarray(ref.fits)))
+    assert delta <= FUSED_FIT_TOL, (req.request_id, delta)
+    # Trimmed back to the request's true geometry.
+    assert [tuple(f.shape) for f in resp.state.factors] == [
+        (d, req.rank) for d in req.tensor.shape
+    ]
+    assert resp.state.weights.shape == (req.rank,)
+    assert len(resp.state.fits) == req.n_iters
+
+
+# --- differential parity ----------------------------------------------------
+
+
+def test_single_request_bucket_parity():
+    svc = DecompositionService(max_batch=4)
+    req = _request(0, dims=(23, 17, 11), nnz=150, rank=5, n_iters=3)
+    assert svc.submit(req)
+    done = svc.run_until_drained()
+    assert set(done) == {"r0"}
+    assert done["r0"].batch_size == 1
+    _assert_parity(done["r0"], req)
+
+
+def test_padded_bucket_parity_heterogeneous_tensors():
+    """Distinct tensors (different true dims and nnz) land in ONE bucket
+    and ONE batch; each result matches its own standalone run."""
+    svc = DecompositionService(max_batch=4)
+    # nnz values chosen so every tensor (post-coalescing) bands to 256.
+    reqs = [
+        _request(0, dims=(19, 15, 12), nnz=150, rank=4),
+        _request(1, dims=(22, 13, 14), nnz=170, rank=4),
+        _request(2, dims=(17, 16, 10), nnz=200, rank=4),
+        _request(3, dims=(20, 12, 16), nnz=160, rank=4),
+    ]
+    sigs = {bucket_signature(r) for r in reqs}
+    assert len(sigs) == 1, sigs
+    for r in reqs:
+        assert svc.submit(r)
+    done = svc.run_until_drained()
+    assert len(done) == 4
+    for r in reqs:
+        assert done[r.request_id].batch_size == 4
+        _assert_parity(done[r.request_id], r)
+
+
+def test_mixed_rank_bucket_parity():
+    """Ranks 3 and 4 band to rank_pad=4 and batch together; zero-column
+    rank padding must preserve each request's trajectory."""
+    svc = DecompositionService(max_batch=4)
+    reqs = [
+        _request(0, rank=3, n_iters=3),
+        _request(1, rank=4, n_iters=3),
+        _request(2, rank=3, n_iters=3),
+    ]
+    assert len({bucket_signature(r) for r in reqs}) == 1
+    for r in reqs:
+        assert svc.submit(r)
+    done = svc.run_until_drained()
+    batch_sizes = {done[r.request_id].batch_size for r in reqs}
+    assert batch_sizes == {3}
+    for r in reqs:
+        _assert_parity(done[r.request_id], r)
+
+
+def test_pad_slot_exclusion():
+    """A short batch is padded to max_batch with replayed pad slots whose
+    results must never surface as responses."""
+    svc = DecompositionService(max_batch=8)
+    reqs = [_request(i) for i in range(3)]
+    for r in reqs:
+        assert svc.submit(r)
+    done = svc.run_until_drained()
+    assert sorted(done) == ["r0", "r1", "r2"]  # exactly the real requests
+    assert all(done[r.request_id].batch_size == 3 for r in reqs)
+    assert svc.metrics.total_logged == 3
+    for r in reqs:
+        _assert_parity(done[r.request_id], r)
+
+
+def test_multiple_buckets_parity():
+    """Different geometries split into different buckets but all serve."""
+    svc = DecompositionService(max_batch=4)
+    reqs = [
+        _request(0, dims=(19, 15, 12), nnz=150, rank=4),
+        _request(1, dims=(40, 30, 25), nnz=300, rank=6, n_iters=3),
+        _request(2, dims=(19, 14, 13), nnz=160, rank=4),
+    ]
+    assert len({bucket_signature(r) for r in reqs}) == 2
+    for r in reqs:
+        assert svc.submit(r)
+    done = svc.run_until_drained()
+    assert len(done) == 3
+    assert done["r1"].batch_size == 1
+    for r in reqs:
+        _assert_parity(done[r.request_id], r)
+
+
+def test_four_mode_request_parity():
+    svc = DecompositionService(max_batch=2)
+    req = _request(0, dims=(11, 9, 8, 7), nnz=90, rank=3, n_iters=3)
+    assert svc.submit(req)
+    done = svc.run_until_drained()
+    _assert_parity(done["r0"], req)
+
+
+# --- scheduler invariants (deterministic property/soak) ---------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    order_seed=st.integers(0, 2**16),
+    max_batch=st.sampled_from([1, 2, 4]),
+    max_inflight=st.sampled_from([1, 2]),
+)
+def test_soak_invariants_randomized_arrival_order(order_seed, max_batch, max_inflight):
+    """Pinned request population, randomized arrival order: no drop, no
+    double answer, in-flight bounded, every admitted request completes."""
+    reqs = [
+        _request(i, dims=(13, 11, 9), nnz=60, rank=3, n_iters=2)
+        if i % 3
+        else _request(i, dims=(26, 22, 18), nnz=120, rank=3, n_iters=2)
+        for i in range(10)
+    ]
+    order = np.random.default_rng(order_seed).permutation(len(reqs))
+    svc = DecompositionService(max_batch=max_batch, max_inflight=max_inflight)
+    for j in order:
+        assert svc.submit(reqs[j])
+    assert svc.admitted == len(reqs)
+
+    ticks = 0
+    while True:
+        more = svc.tick()
+        assert svc.in_flight <= max_inflight
+        assert svc.queue_depth + svc.in_flight * max_batch + len(svc.completed) >= 0
+        ticks += 1
+        assert ticks < 10_000, "service failed to drain"
+        if not more:
+            break
+
+    # Answered exactly once: completed is keyed by id, so double answers
+    # are only visible through the counters the service keeps.
+    assert sorted(svc.completed) == sorted(r.request_id for r in reqs)
+    assert svc.metrics.total_logged == len(reqs)
+    assert svc.rejected == 0
+
+
+def test_soak_trace_replay_deterministic_and_complete():
+    """The pinned synthetic trace serves every request (arrival pacing
+    collapsed) and two identically-seeded traces are identical."""
+    cfg = TrafficConfig(
+        n_requests=8, base_dims=(20, 16, 14), nnz_range=(80, 140), ranks=(3, 4),
+        n_iters=2, seed=5,
+    )
+    t1, t2 = synthetic_trace(cfg), synthetic_trace(cfg)
+    assert [r.request_id for _, r in t1] == [r.request_id for _, r in t2]
+    for (a1, r1), (a2, r2) in zip(t1, t2):
+        assert a1 == a2
+        assert r1.rank == r2.rank and r1.seed == r2.seed
+        np.testing.assert_array_equal(r1.tensor.indices, r2.tensor.indices)
+
+    svc = DecompositionService(max_batch=4, max_inflight=2)
+    done = replay_trace(svc, t1, time_scale=0.0)
+    assert sorted(done) == sorted(r.request_id for _, r in t1)
+    assert svc.rejected == 0
+
+
+# --- admission / backpressure ----------------------------------------------
+
+
+def test_backpressure_rejects_on_full_queue():
+    svc = DecompositionService(max_batch=2, max_queue=2)
+    assert svc.submit(_request(0))
+    assert svc.submit(_request(1))
+    assert not svc.submit(_request(2))  # bounded queue: shed, don't grow
+    assert svc.rejected == 1
+    done = svc.run_until_drained()
+    assert sorted(done) == ["r0", "r1"]
+
+
+def test_duplicate_request_id_refused():
+    svc = DecompositionService()
+    assert svc.submit(_request(0))
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        svc.submit(_request(0))
+    svc.run_until_drained()
+    with pytest.raises(ValueError, match="duplicate request_id"):
+        svc.submit(_request(0))  # also after completion
+
+
+def test_invalid_requests_refused_at_admission():
+    svc = DecompositionService()
+    empty = SparseTensor(
+        np.zeros((0, 3), np.int32), np.zeros((0,), np.float32), (4, 4, 4)
+    )
+    with pytest.raises(ValueError, match="at least one nonzero"):
+        svc.submit(DecompRequest("e", empty, rank=2))
+    with pytest.raises(ValueError, match="rank"):
+        svc.submit(DecompRequest("k", _request(0).tensor, rank=0))
+    with pytest.raises(ValueError, match="n_iters"):
+        svc.submit(DecompRequest("i", _request(0).tensor, rank=2, n_iters=0))
+
+
+# --- bucketing / padding plumbing ------------------------------------------
+
+
+def test_bucket_signature_banding():
+    r = _request(0, dims=(19, 15, 12), nnz=150, rank=5, n_iters=4)
+    sig = bucket_signature(r)
+    assert sig.dims == (32, 16, 16)
+    # The nnz band covers the actual (post-coalescing) nonzero count with
+    # a power-of-two, i.e. < 2x padding waste.
+    assert sig.nnz_pad == 256 and r.tensor.nnz > 128
+    assert sig.rank_pad == 8
+    assert sig.n_iters == 4
+    # Floors keep tiny requests from fragmenting.
+    tiny = _request(1, dims=(5, 4, 3), nnz=20, rank=1)
+    tsig = bucket_signature(tiny)
+    assert tsig.dims == (8, 8, 8)
+    assert tsig.nnz_pad == 64
+    assert tsig.rank_pad == 4
+
+
+def test_tensor_device_operands_memo_and_padding():
+    t = random_sparse_tensor((12, 10, 8), 50, seed=3)
+    a = tensor_device_operands(t, nnz_pad=64)
+    b = tensor_device_operands(t, nnz_pad=64)
+    assert a is b  # uploaded once per (tensor, nnz_pad, dtype)
+    c = tensor_device_operands(t, nnz_pad=128)
+    assert c is not a
+    assert a.nnz_pad == 64 and c.nnz_pad == 128
+    np.testing.assert_array_equal(np.asarray(a.indices)[: t.nnz], t.indices)
+    assert float(np.abs(np.asarray(a.values)[t.nnz :]).sum()) == 0.0
+    np.testing.assert_allclose(
+        float(a.norm2), float((t.values.astype(np.float64) ** 2).sum()), rtol=1e-6
+    )
+    with pytest.raises(ValueError, match="nnz_pad"):
+        tensor_device_operands(t, nnz_pad=t.nnz - 1)
+
+
+def test_multi_tensor_executor_rejects_geometry_mismatch():
+    ex = MultiTensorCPALS((16, 16, 16), nnz_pad=64, rank=4)
+    idx = jnp.zeros((2, 32, 3), jnp.int32)  # wrong nnz_pad
+    val = jnp.zeros((2, 32))
+    n2 = jnp.ones((2,))
+    factors = tuple(jnp.zeros((2, 16, 4)) for _ in range(3))
+    with pytest.raises(ValueError, match="indices shape"):
+        ex.run_batch(idx, val, n2, factors, n_iters=1)
+    idx = jnp.zeros((2, 64, 3), jnp.int32)
+    val = jnp.zeros((2, 64))
+    bad = (jnp.zeros((2, 16, 8)),) + factors[1:]  # wrong rank
+    with pytest.raises(ValueError, match="factor 0"):
+        ex.run_batch(idx, val, n2, bad, n_iters=1)
+
+
+# --- metrics wiring ---------------------------------------------------------
+
+
+def test_service_metrics_report_percentiles():
+    svc = DecompositionService(max_batch=2)
+    for i in range(4):
+        svc.submit(_request(i))
+    svc.run_until_drained()
+    lat = svc.metrics.summary("latency_s")
+    assert lat["count"] == 4
+    assert 0.0 < lat["p50"] <= lat["p99"]
+    waits = svc.metrics.values("queue_wait_s")
+    assert len(waits) == 4 and all(w >= 0.0 for w in waits)
+    # Per-response latency decomposes into wait + service.
+    for resp in svc.completed.values():
+        assert resp.latency_s == pytest.approx(resp.queue_wait_s + resp.service_s)
+
+
+def test_custom_metrics_backend_injected():
+    log = MetricsLogger("svc", capacity=2, quiet=True)
+    svc = DecompositionService(max_batch=1, metrics=log)
+    for i in range(3):
+        svc.submit(_request(i))
+    svc.run_until_drained()
+    assert log.total_logged == 3
+    assert len(log.rows) == 2  # bounded ring kept only the newest rows
