@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,18 @@ serve:
 # CI smoke: same gates on a small RNG-pinned traffic trace.
 serve-smoke:
 	$(PY) scripts/run_serve.py --quick --out /tmp/BENCH_serve_smoke.json
+
+# Closed-loop tile autotuning on the compiled MTTKRP backend: interpret
+# vs compiled, tuned vs default config, measured-vs-modeled pricing ->
+# BENCH_autotune.json; exits nonzero unless compiled is strictly faster
+# than interpret everywhere, tuned <= default, and the compiled kernel
+# matches the oracle (DESIGN.md §13).
+autotune:
+	$(PY) scripts/run_autotune.py --out BENCH_autotune.json
+
+# CI smoke: same gates on one tensor and a 2x2 tune grid.
+autotune-smoke:
+	$(PY) scripts/run_autotune.py --quick --out /tmp/BENCH_autotune_smoke.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

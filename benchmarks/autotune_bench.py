@@ -1,0 +1,139 @@
+"""Closed-loop MTTKRP tile-autotuning benchmark (DESIGN.md §13).
+
+One cell per scaled FROSTT tensor.  Each cell:
+
+  * times the default tile config ``(256, 256, lex)`` on the interpret
+    backend (mode 0 only — the emulator is the slow side) and on the
+    platform's compiled backend (the XLA fallback on CPU);
+  * runs the DSE autotuner over the full tune space on the compiled
+    backend, summing fenced per-mode medians;
+  * checks compiled-vs-ref numerical parity on every mode.
+
+Gate fields per cell (the driver aggregates them):
+
+  * ``compiled_faster`` — compiled default strictly beats interpret;
+  * ``tuned_ok``        — tuned total <= default total (structural: the
+                          default config is always in the tune space);
+  * ``parity_ok``       — max rel err vs the jnp oracle <= PARITY_RTOL.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mttkrp import mttkrp_ref
+from repro.data.synthetic_tensors import make_frostt_like
+from repro.dse.autotune import (
+    DEFAULT_TILE_CONFIG,
+    Autotuner,
+    measure_config,
+    measured_vs_modeled,
+)
+from repro.kernels.mttkrp.ops import get_plan, mttkrp_from_plan, resolve_backend
+
+# Compiled kernels accumulate in f32 like the oracle; the tolerance
+# covers reassociated summation order across tile boundaries.
+PARITY_RTOL = 2e-5
+
+
+def make_factors(tensor, rank: int, seed: int = 0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), tensor.nmodes)
+    return [
+        jax.random.normal(k, (s, rank), jnp.float32)
+        for k, s in zip(keys, tensor.shape)
+    ]
+
+
+def parity_max_rel_err(tensor, factors, config, backend: str) -> float:
+    """Max relative error of the compiled kernel vs the jnp oracle, all modes."""
+    worst = 0.0
+    for mode in range(tensor.nmodes):
+        plan = get_plan(
+            tensor,
+            mode,
+            tile_nnz=config.tile_nnz,
+            rows_per_block=config.rows_per_block,
+        )
+        got = np.asarray(mttkrp_from_plan(plan, factors, backend=backend))
+        want = np.asarray(mttkrp_ref(tensor, factors, mode))
+        err = float(np.abs(got - want).max() / (np.abs(want).max() + 1e-9))
+        worst = max(worst, err)
+    return worst
+
+
+def bench_cell(
+    name: str,
+    scale: float,
+    *,
+    rank: int,
+    tuner: Autotuner,
+    reps: int = 3,
+    interpret_reps: int = 1,
+    seed: int = 0,
+) -> dict:
+    """Measure one (tensor, backend) autotuning cell; see module docstring."""
+    tensor = make_frostt_like(name, scale=scale, seed=seed)
+    factors = make_factors(tensor, rank, seed=seed)
+    backend = resolve_backend(None)
+
+    # Interpret baseline, mode 0 at the default config.  The emulator's
+    # per-tile overhead makes full-mode sweeps prohibitive; one mode is
+    # enough to establish the compiled-vs-interpret ordering.
+    interpret_s = measure_config(
+        tensor, factors, 0, DEFAULT_TILE_CONFIG, backend="interpret",
+        reps=interpret_reps,
+    )
+    compiled_mode0_s = measure_config(
+        tensor, factors, 0, DEFAULT_TILE_CONFIG, backend=backend, reps=reps
+    )
+
+    result = tuner.tune(tensor, rank, seed=seed)
+    parity = parity_max_rel_err(tensor, factors, result.best, backend)
+
+    cell = {
+        "tensor": f"{name}@{scale:g}",
+        "dims": list(tensor.shape),
+        "nnz": tensor.nnz,
+        "rank": rank,
+        "backend": backend,
+        "signature": str(result.signature),
+        "interpret_mode0_s": interpret_s,
+        "compiled_mode0_s": compiled_mode0_s,
+        "interpret_speedup": interpret_s / compiled_mode0_s,
+        "default_config": DEFAULT_TILE_CONFIG.label,
+        "default_s": result.default_s,
+        "best_config": result.best.label,
+        "best_s": result.best_s,
+        "speedup_vs_default": result.speedup_vs_default,
+        "parity_max_rel_err": parity,
+        "timings": {cfg.label: s for cfg, s in result.timings.items()},
+        "compiled_faster": compiled_mode0_s < interpret_s,
+        "tuned_ok": result.best_s <= result.default_s,
+        "parity_ok": parity <= PARITY_RTOL,
+    }
+    cell["measured_vs_modeled"] = measured_vs_modeled(
+        tensor, result, rank=rank, name=f"{name}@{scale:g}"
+    )
+    return cell
+
+
+def run() -> list[tuple[str, float, str]]:
+    """CSV rows for the benchmarks.run aggregator (smallest cell only)."""
+    tuner = Autotuner(reps=2)
+    cell = bench_cell("NELL-2", 5e-5, rank=16, tuner=tuner, reps=2)
+    return [
+        ("autotune.interpret_mode0_us", round(cell["interpret_mode0_s"] * 1e6, 1),
+         "default config, emulator"),
+        ("autotune.compiled_mode0_us", round(cell["compiled_mode0_s"] * 1e6, 1),
+         cell["backend"]),
+        ("autotune.best_config", 0.0, cell["best_config"]),
+        ("autotune.speedup_vs_default", round(cell["speedup_vs_default"], 3), ""),
+        ("autotune.parity_max_rel_err", cell["parity_max_rel_err"], "vs oracle"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a synthetic 3-mode sparse tensor, runs CP-ALS with the Pallas
-MTTKRP kernel (interpret mode on CPU), and prints the fit trace plus the
-paper's performance-model verdict for the same computation on the
-O-SRAM vs E-SRAM FPGA.
+Builds a synthetic 3-mode sparse tensor, runs CP-ALS with the pallas
+MTTKRP path (backend-dispatched: the compiled XLA fallback on CPU,
+DESIGN.md §13), and prints the fit trace plus the paper's
+performance-model verdict for the same computation on the O-SRAM vs
+E-SRAM FPGA.
 """
 
 import numpy as np

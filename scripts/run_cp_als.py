@@ -35,17 +35,19 @@ from repro.core.cp_als import cp_als
 from repro.core.cp_als_fused import FUSED_FIT_TOL, FusedCPALS
 from repro.data.frostt import FROSTT_TENSORS, PAPER_RANK
 from repro.data.synthetic_tensors import make_frostt_like
+from repro.kernels.mttkrp.ops import resolve_backend
 
 DEFAULT_TENSORS = "NELL-2@1e-4,PATENTS@1e-5"
 QUICK_TENSORS = "NELL-2@5e-5"
 DEFAULT_IMPLS = "ref,pallas,sharded"
 QUICK_IMPLS = "ref"
 
-# Off-TPU the Pallas kernel runs in interpret mode, whose per-tile
-# emulation overhead scales with nnz_pad: above this many nonzeros an
-# eager-vs-fused comparison measures the emulator, not the dispatch
-# overhead the fused executor removes — the cell is skipped (recorded in
-# the artifact), mirroring the engine's PALLAS_MAX_OUTPUT_ROWS guard.
+# Interpret-mode-only guard: the Pallas emulator's per-tile overhead
+# scales with nnz_pad, so above this many nonzeros an eager-vs-fused
+# comparison measures the emulator rather than the dispatch overhead the
+# fused executor removes — the cell is skipped (recorded in the
+# artifact), mirroring the engine's PALLAS_MAX_OUTPUT_ROWS guard.  The
+# compiled backends (mosaic/triton/xla; DESIGN.md §13) run these cells.
 PALLAS_MAX_BENCH_NNZ = 20_000
 
 
@@ -90,6 +92,13 @@ def main(argv: list[str] | None = None) -> int:
         action="store_true",
         help=f"CI smoke: tensors {QUICK_TENSORS}, impls {QUICK_IMPLS}, 2 repeats",
     )
+    ap.add_argument(
+        "--backend",
+        default=None,
+        choices=("mosaic", "triton", "xla", "interpret"),
+        help="pallas-path execution backend (default: the platform's "
+        "compiled path — the XLA fallback on CPU; DESIGN.md §13)",
+    )
     ap.add_argument("--out", default="BENCH_cp_als.json")
     args = ap.parse_args(argv)
 
@@ -105,6 +114,7 @@ def main(argv: list[str] | None = None) -> int:
     if unknown:
         raise SystemExit(f"unknown impls {unknown}")
     repeats = 2 if args.quick else args.repeats
+    pallas_backend = resolve_backend(args.backend)
 
     cells = []
     skipped = []
@@ -113,11 +123,16 @@ def main(argv: list[str] | None = None) -> int:
         tensor = make_frostt_like(name, scale=scale, seed=args.seed)
         for impl in impls:
             label = f"{name}@{scale:g}/{impl}"
-            if impl == "pallas" and tensor.nnz > PALLAS_MAX_BENCH_NNZ:
+            if (
+                impl == "pallas"
+                and pallas_backend == "interpret"
+                and tensor.nnz > PALLAS_MAX_BENCH_NNZ
+            ):
                 reason = (
                     f"nnz={tensor.nnz} exceeds PALLAS_MAX_BENCH_NNZ="
-                    f"{PALLAS_MAX_BENCH_NNZ} (interpret-mode emulation would "
-                    "dominate the comparison)"
+                    f"{PALLAS_MAX_BENCH_NNZ} on the interpret backend "
+                    "(emulation would dominate the comparison; compiled "
+                    "backends run this cell)"
                 )
                 skipped.append({"tensor": f"{name}@{scale:g}", "impl": impl,
                                 "reason": reason})
@@ -133,12 +148,13 @@ def main(argv: list[str] | None = None) -> int:
                     tol=0.0,
                     seed=args.seed,
                     impl=impl,
+                    backend=args.backend,
                 )
 
             eager_state = eager()  # warmup: compile-cache the per-mode jits
             eager_s = _best_of(eager, repeats)
 
-            executor = FusedCPALS(tensor, args.rank, impl=impl)
+            executor = FusedCPALS(tensor, args.rank, impl=impl, backend=args.backend)
             t0 = time.perf_counter()
             fused_res = executor.run(
                 n_iters=args.iters, tol=0.0, seed=args.seed, fit_every=args.fit_every
@@ -159,11 +175,12 @@ def main(argv: list[str] | None = None) -> int:
 
             # Multi-restart throughput: R concurrent decompositions per
             # compiled program (vmap over init seeds) vs R sequential runs.
-            # Skipped for pallas off-TPU: vmap multiplies the interpret-mode
-            # per-tile emulation overhead, measuring the emulator rather
-            # than the batching (on TPU the batched grid compiles natively).
+            # Skipped only for pallas on the interpret backend: vmap
+            # multiplies the per-tile emulation overhead, measuring the
+            # emulator rather than the batching.  The compiled backends
+            # (mosaic/triton/xla) batch natively and are timed.
             batched_s = throughput = batch_gain = None
-            if impl != "pallas":
+            if impl != "pallas" or pallas_backend != "interpret":
                 executor.run(
                     n_iters=args.iters, tol=0.0, seed=args.seed, restarts=args.restarts
                 )  # warmup the batched program
@@ -203,7 +220,7 @@ def main(argv: list[str] | None = None) -> int:
                 f"{args.restarts} restarts @ {throughput:.1f}/s "
                 f"(batch gain {batch_gain:.2f}x)"
                 if throughput is not None
-                else "restart timing skipped (pallas interpret)"
+                else "restart timing skipped (pallas interpret backend)"
             )
             print(
                 f"    eager {eager_s*1e3:8.1f} ms | fused {fused_s*1e3:8.1f} ms "
@@ -227,6 +244,8 @@ def main(argv: list[str] | None = None) -> int:
             "fit_every": args.fit_every,
             "repeats": repeats,
             "seed": args.seed,
+            "backend": args.backend,
+            "resolved_backend": pallas_backend,
         },
         "fit_tol": FUSED_FIT_TOL,
         "all_faster": all_faster,

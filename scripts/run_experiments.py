@@ -90,6 +90,19 @@ def main(argv: list[str] | None = None) -> int:
         default=1,
         help="fused executor host-sync cadence in sweeps",
     )
+    ap.add_argument(
+        "--backend",
+        default=None,
+        choices=("mosaic", "triton", "xla", "interpret"),
+        help="pallas-path execution backend (default: the platform's "
+        "compiled path — the XLA fallback on CPU; DESIGN.md §13)",
+    )
+    ap.add_argument(
+        "--autotune",
+        action="store_true",
+        help="tune (tile_nnz, rows_per_block) per tensor through the "
+        "closed-loop DSE autotuner before measuring pallas cells",
+    )
     ap.add_argument("--out", default="BENCH_experiments.json")
     args = ap.parse_args(argv)
 
@@ -107,6 +120,8 @@ def main(argv: list[str] | None = None) -> int:
         cost_analysis=not args.no_cost_analysis,
         fused=not args.no_fused,
         fit_every=args.fit_every,
+        backend=args.backend,
+        autotune=args.autotune,
     )
     t0 = time.perf_counter()
     result = run_experiments(spec)

@@ -122,6 +122,7 @@ def cp_als(
     tol: float = 1e-5,
     seed: int = 0,
     impl: str = "ref",
+    backend: str | None = None,
     mttkrp_fn: Callable | None = None,
     verbose: bool = False,
     dtype=jnp.float32,
@@ -134,6 +135,10 @@ def cp_als(
     ``mttkrp_fn(tensor, factors, mode) -> (I_mode, R)`` overrides the impl
     (used by the distributed driver to inject the sharded path with its
     precomputed plans).
+
+    ``backend`` selects the pallas-path execution backend (``"mosaic"``,
+    ``"triton"``, ``"xla"``, ``"interpret"``; DESIGN.md §13).  Ignored for
+    the other impls.
 
     ``dtype`` is the factor storage dtype (``cp_init``'s ``dtype=``,
     previously unreachable from here); values and the tensor norm are kept
@@ -166,6 +171,7 @@ def cp_als(
             tol=tol,
             seed=seed,
             impl=impl,
+            backend=backend,
             dtype=dtype,
             fit_every=fit_every,
             restarts=restarts,
@@ -192,7 +198,8 @@ def cp_als(
         if impl == "ref":
             mttkrp_fn = lambda t, f, m: mttkrp_ref((indices, values, t.shape), f, m)
         else:
-            mttkrp_fn = lambda t, f, m: mttkrp(t, f, m, impl=impl)
+            impl_kwargs = {"backend": backend} if impl == "pallas" else {}
+            mttkrp_fn = lambda t, f, m: mttkrp(t, f, m, impl=impl, **impl_kwargs)
 
     fits: list[float] = []
     fit_prev = -jnp.inf

@@ -105,7 +105,20 @@ class FusedCPALS:
         ordering: str | None = None,
         scheme: str = "mode_ordered",
         interpret: bool | None = None,
+        backend: str | None = None,
+        autotune=None,
     ) -> None:
+        # ``autotune`` is duck-typed (``config_for(tensor, rank) -> cfg``
+        # with tile_nnz/rows_per_block/ordering fields — in practice
+        # ``repro.dse.autotune.Autotuner``) so core never imports the DSE
+        # package.  The tuned band winner overrides the plan geometry;
+        # an explicitly-passed ``ordering`` still wins over the tuned one.
+        if autotune is not None:
+            cfg = autotune.config_for(tensor, rank)
+            tile_nnz = int(cfg.tile_nnz)
+            rows_per_block = int(cfg.rows_per_block)
+            if ordering is None and cfg.ordering != "lex":
+                ordering = cfg.ordering
         if tensor.nnz == 0:
             raise ValueError(
                 "cp_als requires a tensor with at least one nonzero "
@@ -152,14 +165,12 @@ class FusedCPALS:
                 self._ref_streams = {m: shared for m in range(self.nmodes)}
         elif impl == "pallas":
             from repro.kernels.mttkrp.ops import (
-                _default_interpret,
                 get_plan,
                 plan_device_buffers,
+                resolve_backend,
             )
 
-            self._interpret = (
-                _default_interpret() if interpret is None else interpret
-            )
+            self._backend = resolve_backend(backend, interpret=interpret)
             self._plans = [
                 get_plan(
                     tensor,
@@ -198,10 +209,10 @@ class FusedCPALS:
             idx_m, val_m = self._ref_streams[mode]
             return mttkrp_ref((idx_m, val_m, self.tensor.shape), factors, mode)
         if self.impl == "pallas":
-            from repro.kernels.mttkrp.ops import mttkrp_pallas_from_plan
+            from repro.kernels.mttkrp.ops import mttkrp_from_plan
 
-            return mttkrp_pallas_from_plan(
-                self._plans[mode], factors, interpret=self._interpret
+            return mttkrp_from_plan(
+                self._plans[mode], factors, backend=self._backend
             )
         from repro.distributed.mttkrp_dist import mttkrp_sharded_apply
 
@@ -443,6 +454,8 @@ def cp_als_fused(
     ordering: str | None = None,
     scheme: str = "mode_ordered",
     interpret: bool | None = None,
+    backend: str | None = None,
+    autotune=None,
     verbose: bool = False,
 ) -> BatchedCPState:
     """One-shot fused CP-ALS (build the executor, run once).
@@ -461,6 +474,8 @@ def cp_als_fused(
         ordering=ordering,
         scheme=scheme,
         interpret=interpret,
+        backend=backend,
+        autotune=autotune,
     )
     return executor.run(
         n_iters=n_iters,

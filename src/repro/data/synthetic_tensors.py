@@ -26,7 +26,10 @@ __all__ = [
 # (repro.experiments): chosen so CP-ALS is executable in seconds per impl
 # while the scaled tensors keep each dataset's mode-ratio / skew regime.
 # LBNL keeps its 5-mode structure; its 868K-row mode makes the Pallas
-# plan's block padding explode, so the engine runs it on ref/sharded only.
+# plan's block padding explode, which priced interpret-mode emulation out
+# entirely.  The engine's PALLAS_MAX_OUTPUT_ROWS guard still skips LBNL's
+# pallas cells on the interpret backend; the compiled backends (the XLA
+# fallback on CPU, DESIGN.md §13) run them.
 EXPERIMENT_SCALES: dict[str, float] = {
     "NELL-2": 2e-4,
     "LBNL": 2e-2,

@@ -17,13 +17,28 @@ axes sweepable (DESIGN.md §8):
     (they never depend on the memory technology), choosing exact LRU
     trace simulation or the Che approximation per tensor;
   * ``repro.dse.pareto``    — the time-vs-energy comparison layer:
-    Pareto frontier, ranking, and baseline-relative speedup/savings.
+    Pareto frontier, ranking, and baseline-relative speedup/savings;
+  * ``repro.dse.autotune``  — the measured side of the loop
+    (DESIGN.md §13): closed-loop ``(tile_nnz, rows_per_block,
+    ordering)`` tuning on the compiled MTTKRP backends, cached per
+    serve-layer geometry band, priced measured-vs-modeled through
+    ``evaluate_sweep``.
 
 The TPU-v5e and photonic-IMC stacks participate as plain hierarchy
 instances — no per-technology dispatch; sweep tables render through
 ``repro.perf.report``; ``benchmarks/dse_sweep.py`` is the CLI driver.
 """
 
+from repro.dse.autotune import (
+    DEFAULT_TILE_CONFIG,
+    Autotuner,
+    TileConfig,
+    TuneResult,
+    TuneSpace,
+    WallTimeMemo,
+    measure_config,
+    measured_vs_modeled,
+)
 from repro.dse.evaluator import (
     HitRateCache,
     PointTensorResult,
@@ -52,6 +67,14 @@ from repro.dse.sweep import (
 )
 
 __all__ = [
+    "DEFAULT_TILE_CONFIG",
+    "Autotuner",
+    "TileConfig",
+    "TuneResult",
+    "TuneSpace",
+    "WallTimeMemo",
+    "measure_config",
+    "measured_vs_modeled",
     "DEFAULT_AXIS_VALUES",
     "SWEEP_AXES",
     "SweepPoint",

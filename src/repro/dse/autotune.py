@@ -1,0 +1,364 @@
+"""Closed-loop tile autotuning for the compiled MTTKRP paths (DESIGN.md §13).
+
+PRs 1–2 built an *analytic* design-space explorer: every configuration is
+priced by the paper's closed-form memory model.  This module closes the
+loop the way the PMC paper (arXiv 2207.08298) closes it for controller
+parameters: the plan-geometry knobs that actually exist in our kernels —
+``(tile_nnz, rows_per_block, ordering)`` — are swept with *measured*
+fenced wall time on the backend-dispatched compiled path
+(``repro.kernels.mttkrp.ops.resolve_backend``), the winner is cached by
+padded geometry band, and the measurements feed back into the DSE
+evaluator so modeled and measured seconds sit side by side in one table.
+
+Three pieces:
+
+  * ``TileConfig`` / ``TuneSpace`` — the swept knob grid.  The default
+    config ``(256, 256, "lex")`` is always a member, so the selected
+    winner is ≤ the default *by construction under the shared
+    measurement protocol* (argmin over a set containing the default).
+  * ``WallTimeMemo`` — a ``HitRateCache``-style memo (hits/misses
+    counters, keyed store) of per-(signature, mode, config, backend)
+    median wall times, so re-tuning a tensor that lands in an
+    already-tuned band measures nothing.
+  * ``Autotuner`` — tunes per tensor, keyed by
+    ``repro.serve.geometry_signature`` with ``n_iters=0`` — the SAME
+    power-of-two banding the serving layer buckets on, so one tuned
+    band covers every request the service would batch together.
+    ``config_for`` is the duck-typed hook ``DecompositionService``
+    consumes (the serve layer never imports this package).
+
+``measured_vs_modeled`` prices the tuner's per-ordering measurements
+through ``evaluate_sweep``'s exact-trace method on an ad-hoc
+characteristics record, returning rows with both numbers per config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.memory_tech import O_SRAM, MemoryTechSpec
+from repro.data.frostt import FrosttTensor
+from repro.dse.evaluator import evaluate_sweep
+from repro.dse.sweep import SweepPoint
+from repro.reorder import ORDERINGS
+from repro.serve.service import BucketSignature, geometry_signature
+
+__all__ = [
+    "TileConfig",
+    "DEFAULT_TILE_CONFIG",
+    "TuneSpace",
+    "WallTimeMemo",
+    "TuneResult",
+    "Autotuner",
+    "measure_config",
+    "measured_vs_modeled",
+]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class TileConfig:
+    """One point of the kernel plan-geometry space."""
+
+    tile_nnz: int = 256
+    rows_per_block: int = 256
+    ordering: str = "lex"
+
+    def __post_init__(self):
+        if self.tile_nnz < 1:
+            raise ValueError(f"tile_nnz must be >= 1, got {self.tile_nnz}")
+        if self.rows_per_block < 1:
+            raise ValueError(
+                f"rows_per_block must be >= 1, got {self.rows_per_block}"
+            )
+        if self.ordering not in ORDERINGS:
+            raise ValueError(
+                f"unknown ordering {self.ordering!r}; known: {list(ORDERINGS)}"
+            )
+
+    @property
+    def label(self) -> str:
+        return f"({self.tile_nnz},{self.rows_per_block},{self.ordering})"
+
+
+#: The historical fixed plan geometry every pre-autotuner call site used.
+DEFAULT_TILE_CONFIG = TileConfig(256, 256, "lex")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpace:
+    """The swept grid.  ``configs()`` always contains the default config,
+    which is what makes the bench gate "tuned ≤ default" a structural
+    property rather than a hope."""
+
+    tile_nnz: tuple[int, ...] = (128, 256, 512)
+    rows_per_block: tuple[int, ...] = (64, 256, 512)
+    orderings: tuple[str, ...] = ("lex",)
+
+    def configs(self) -> list[TileConfig]:
+        out = [DEFAULT_TILE_CONFIG]
+        for o in self.orderings:
+            for t in self.tile_nnz:
+                for r in self.rows_per_block:
+                    cfg = TileConfig(t, r, o)
+                    if cfg not in out:
+                        out.append(cfg)
+        return out
+
+
+class WallTimeMemo:
+    """Measured-seconds memo in the mold of ``dse.evaluator.HitRateCache``:
+    a keyed store plus hits/misses counters so tests and bench artifacts
+    can verify the tuner never re-measures a (band, mode, config) cell."""
+
+    def __init__(self) -> None:
+        self._store: dict[tuple, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @staticmethod
+    def key(
+        signature: BucketSignature, mode: int, config: TileConfig, backend: str
+    ) -> tuple:
+        return (signature, mode, config, backend)
+
+    def lookup(self, key: tuple) -> float | None:
+        if key in self._store:
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def store(self, key: tuple, seconds: float) -> float:
+        self._store[key] = float(seconds)
+        return self._store[key]
+
+
+def measure_config(
+    tensor,
+    factors: Sequence[jax.Array],
+    mode: int,
+    config: TileConfig,
+    *,
+    backend: str | None = None,
+    reps: int = 3,
+) -> float:
+    """Fenced median wall seconds of one mode's MTTKRP under ``config``.
+
+    One untimed warmup call absorbs plan build + trace/compile; the
+    median of ``reps`` subsequent ``block_until_ready``-fenced calls is
+    the steady-state number — the same protocol
+    ``experiments.measure.measure_cp_als`` uses for its ``steady_s``.
+    """
+    from repro.kernels.mttkrp.ops import get_plan, mttkrp_from_plan
+
+    plan = get_plan(
+        tensor,
+        mode,
+        tile_nnz=config.tile_nnz,
+        rows_per_block=config.rows_per_block,
+        ordering=config.ordering,
+    )
+    jax.block_until_ready(mttkrp_from_plan(plan, factors, backend=backend))
+    times = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mttkrp_from_plan(plan, factors, backend=backend))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of tuning one tensor band."""
+
+    signature: BucketSignature
+    backend: str
+    best: TileConfig
+    timings: Mapping[TileConfig, float]  # summed over tuned modes
+
+    @property
+    def best_s(self) -> float:
+        return self.timings[self.best]
+
+    @property
+    def default_s(self) -> float:
+        return self.timings[DEFAULT_TILE_CONFIG]
+
+    @property
+    def speedup_vs_default(self) -> float:
+        return self.default_s / self.best_s
+
+    def to_dict(self) -> dict:
+        return {
+            "signature": dataclasses.asdict(self.signature),
+            "backend": self.backend,
+            "best": dataclasses.asdict(self.best),
+            "best_s": self.best_s,
+            "default_s": self.default_s,
+            "speedup_vs_default": self.speedup_vs_default,
+            "timings": {
+                cfg.label: s for cfg, s in sorted(self.timings.items())
+            },
+        }
+
+
+class Autotuner:
+    """Per-tensor closed-loop tile tuner with band-keyed config caching.
+
+    ``tune`` sweeps ``space.configs()`` over the tensor's modes with
+    measured fenced medians on the resolved compiled backend and caches
+    the argmin per geometry band; ``config_for`` answers from that cache
+    (optionally tuning on miss) and is the duck-typed hook the serving
+    layer's bucket geometry consumes.
+    """
+
+    def __init__(
+        self,
+        space: TuneSpace | None = None,
+        *,
+        backend: str | None = None,
+        reps: int = 3,
+        memo: WallTimeMemo | None = None,
+        tune_on_miss: bool = False,
+    ) -> None:
+        from repro.kernels.mttkrp.ops import resolve_backend
+
+        self.space = space or TuneSpace()
+        self.backend = resolve_backend(backend)
+        self.reps = reps
+        self.memo = memo if memo is not None else WallTimeMemo()
+        self.tune_on_miss = tune_on_miss
+        self.results: dict[BucketSignature, TuneResult] = {}
+
+    @staticmethod
+    def signature_of(tensor, rank: int) -> BucketSignature:
+        """The tuning-cache key: the serve layer's geometry band with
+        ``n_iters=0`` (sweep count is irrelevant to kernel geometry)."""
+        return geometry_signature(tensor.shape, tensor.nnz, rank, 0)
+
+    def config_for(self, tensor, rank: int) -> TileConfig:
+        """The cached winning config for the tensor's band (the serving
+        hook).  Untuned bands answer the default config unless
+        ``tune_on_miss`` — admission must stay cheap by default."""
+        sig = self.signature_of(tensor, rank)
+        result = self.results.get(sig)
+        if result is not None:
+            return result.best
+        if self.tune_on_miss:
+            return self.tune(tensor, rank).best
+        return DEFAULT_TILE_CONFIG
+
+    def tune(
+        self,
+        tensor,
+        rank: int,
+        *,
+        modes: Sequence[int] | None = None,
+        seed: int = 0,
+        force: bool = False,
+    ) -> TuneResult:
+        """Measure every config on ``tensor`` and cache the band winner.
+
+        Timings sum the per-mode fenced medians over ``modes`` (default:
+        all modes — one CP-ALS sweep's worth of MTTKRP work).  Cells
+        already measured for this band come from the ``WallTimeMemo``.
+        """
+        from repro.core.cp_als import cp_init
+
+        sig = self.signature_of(tensor, rank)
+        if not force and sig in self.results:
+            return self.results[sig]
+        if modes is None:
+            modes = range(tensor.nmodes)
+        factors = cp_init(tensor, rank, seed=seed)
+        timings: dict[TileConfig, float] = {}
+        for cfg in self.space.configs():
+            total = 0.0
+            for m in modes:
+                key = self.memo.key(sig, m, cfg, self.backend)
+                s = self.memo.lookup(key)
+                if s is None:
+                    s = self.memo.store(
+                        key,
+                        measure_config(
+                            tensor,
+                            factors,
+                            m,
+                            cfg,
+                            backend=self.backend,
+                            reps=self.reps,
+                        ),
+                    )
+                total += s
+            timings[cfg] = total
+        best = min(timings, key=lambda c: (timings[c], c != DEFAULT_TILE_CONFIG))
+        result = TuneResult(
+            signature=sig, backend=self.backend, best=best, timings=timings
+        )
+        self.results[sig] = result
+        return result
+
+
+def measured_vs_modeled(
+    tensor,
+    result: TuneResult,
+    *,
+    rank: int,
+    name: str = "autotuned",
+    tech: MemoryTechSpec = O_SRAM,
+    zipf_alpha: float = 0.75,
+) -> list[dict]:
+    """Price the tuner's measurements against the analytic DSE model.
+
+    Each distinct ordering in the tune result becomes one ``SweepPoint``
+    evaluated with the exact-trace hit-rate method over THIS tensor (an
+    ad-hoc characteristics record carries its true dims/nnz), so every
+    measured config gets the closed-form Eq-1 seconds the paper's model
+    assigns to its execution order.  Modeled seconds move only with the
+    ordering axis — the model has no concept of tile geometry, which is
+    exactly why the measured column exists (DESIGN.md §13).
+    """
+    chars = FrosttTensor(
+        name=name,
+        dims=tuple(int(d) for d in tensor.shape),
+        nnz=int(tensor.nnz),
+        density=float(tensor.nnz / max(1, np.prod([int(d) for d in tensor.shape]))),
+        zipf_alpha=zipf_alpha,
+    )
+    orderings = sorted({cfg.ordering for cfg in result.timings})
+    points = [
+        SweepPoint(label=f"{name}[ordering={o}]", tech=tech, rank=rank, ordering=o)
+        for o in orderings
+    ]
+    sweep = evaluate_sweep(
+        points,
+        {name: chars},
+        hit_rate_method="trace",
+        trace_tensors={name: tensor},
+        trace_nnz_limit=max(tensor.nnz, 1),
+    )
+    modeled = {
+        o: sweep.cell(f"{name}[ordering={o}]", name).seconds for o in orderings
+    }
+    rows = []
+    for cfg, measured_s in sorted(result.timings.items()):
+        rows.append(
+            {
+                "config": cfg.label,
+                "tile_nnz": cfg.tile_nnz,
+                "rows_per_block": cfg.rows_per_block,
+                "ordering": cfg.ordering,
+                "measured_s": measured_s,
+                "modeled_s": modeled[cfg.ordering],
+                "best": cfg == result.best,
+            }
+        )
+    return rows

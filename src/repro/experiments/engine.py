@@ -69,9 +69,13 @@ ALL_TECHS = (E_SRAM, O_SRAM, TPU_V5E, PHOTONIC_IMC)
 # value lives in tests/test_dse.py::CHE_VS_TRACE_TOL and must stay equal.
 CHE_VS_TRACE_TOL = 0.10
 
-# Pallas interpret mode pads every output block to >= 1 tile, so a huge
-# output mode (LBNL's 868K-row mode 4) explodes the gathered operand; the
-# engine skips pallas for such tensors and records why.
+# The pure-Python Pallas EMULATOR is quadratically slow in blocks × tiles
+# (it replays every output block's read-modify-write per grid step), so a
+# huge output mode (LBNL's ~400K-row mode 4) makes interpret-mode wall
+# time meaningless; the engine skips pallas for such tensors ONLY when
+# the resolved backend is "interpret" and records why.  Compiled backends
+# (mosaic / triton / the XLA fallback — the default everywhere since the
+# DESIGN.md §13 dispatch) execute these cells directly.
 PALLAS_MAX_OUTPUT_ROWS = 20_000
 
 
@@ -100,6 +104,13 @@ class ExperimentSpec:
     # the artifact.
     fused: bool = True
     fit_every: int = 1
+    # Pallas-path execution backend (repro.kernels.mttkrp.ops.BACKENDS);
+    # None resolves to the platform's compiled path — the XLA fallback on
+    # CPU — so measured cells are real kernel wall times (DESIGN.md §13).
+    backend: str | None = None
+    # Tune (tile_nnz, rows_per_block) per tensor through the closed-loop
+    # DSE autotuner before measuring the pallas cells (DESIGN.md §13).
+    autotune: bool = False
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -300,6 +311,8 @@ def _measure(
     tensor,
     ft,
     ordering: str | None,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
 ):
     if impl == "sharded":
         return _measure_sharded_subprocess(spec, name, scale, ft.name, ordering)
@@ -310,7 +323,10 @@ def _measure(
         n_iters=spec.n_iters,
         impl=impl,
         seed=spec.seed,
+        tile_nnz=tile_nnz,
+        rows_per_block=rows_per_block,
         ordering=ordering,
+        backend=spec.backend,
         cost_analysis=spec.cost_analysis,
         fused=spec.fused,
         fit_every=spec.fit_every,
@@ -346,6 +362,7 @@ def _measure_sharded_subprocess(
             "devices": spec.n_shards,
             "fused": spec.fused,
             "fit_every": spec.fit_every,
+            "backend": spec.backend,
         }
     )
     env = os.environ.copy()
@@ -410,16 +427,30 @@ def _reconcile_hit_rates(
 
 def run_experiments(spec: ExperimentSpec = ExperimentSpec()) -> ExperimentResult:
     """Execute the full measured↔modeled reconciliation (module docstring)."""
+    from repro.kernels.mttkrp.ops import resolve_backend
+
     runs: list[RunResult] = []
     skipped: list[dict] = []
     points = tech_comparison(list(ALL_TECHS), rank=spec.rank)
+    pallas_backend = resolve_backend(spec.backend)
+    tuner = None
+    if spec.autotune:
+        from repro.dse.autotune import Autotuner
+
+        tuner = Autotuner(backend=spec.backend)
     for name, scale in spec.tensors:
         tensor = make_frostt_like(name, scale=scale, seed=spec.seed)
         ft = scaled_characteristics(name, tensor, scale=scale)
         tensors = {ft.name: ft}
         modeled = evaluate_sweep(points, tensors, hit_rate_method="che")
         for impl in spec.impls:
-            if impl == "pallas" and max(tensor.shape) > PALLAS_MAX_OUTPUT_ROWS:
+            # The emulator-only size guard (PALLAS_MAX_OUTPUT_ROWS comment
+            # above): compiled backends run every cell.
+            if (
+                impl == "pallas"
+                and pallas_backend == "interpret"
+                and max(tensor.shape) > PALLAS_MAX_OUTPUT_ROWS
+            ):
                 skipped.append(
                     {
                         "tensor": ft.name,
@@ -427,23 +458,33 @@ def run_experiments(spec: ExperimentSpec = ExperimentSpec()) -> ExperimentResult
                         "reason": (
                             f"output mode of {max(tensor.shape)} rows exceeds "
                             f"PALLAS_MAX_OUTPUT_ROWS={PALLAS_MAX_OUTPUT_ROWS} "
-                            "(interpret-mode block padding would explode)"
+                            "on the interpret backend (emulator-only guard; "
+                            "compiled backends run this cell)"
                         ),
                     }
                 )
                 continue
+            tile_nnz = rows_per_block = 256
+            if tuner is not None and impl == "pallas":
+                cfg = tuner.tune(tensor, spec.rank).best
+                tile_nnz, rows_per_block = cfg.tile_nnz, cfg.rows_per_block
             for ordering in spec.orderings:
                 # The degree strategy relabels the executed tensor once,
                 # globally (DESIGN.md §10).  The dims/nnz characteristics
                 # — everything the analytic model reads — are
                 # label-invariant.
                 exec_tensor, _perms = prepare_execution(tensor, ordering)
-                measured = _measure(spec, name, scale, impl, exec_tensor, ft, ordering)
+                measured = _measure(
+                    spec, name, scale, impl, exec_tensor, ft, ordering,
+                    tile_nnz=tile_nnz, rows_per_block=rows_per_block,
+                )
                 trace_cache = ExecutedTraceHitRates(
                     exec_tensor,
                     impl,
                     scheme=spec.scheme,
                     n_shards=spec.n_shards,
+                    tile_nnz=tile_nnz,
+                    rows_per_block=rows_per_block,
                     ordering=ordering,
                 )
                 priced = evaluate_sweep(points, tensors, cache=trace_cache)

@@ -120,7 +120,12 @@ class MeasuredRun:
 
 
 def mode_cost_analysis(
-    tensor: SparseTensor, rank: int, mode: int, impl: str
+    tensor: SparseTensor,
+    rank: int,
+    mode: int,
+    impl: str,
+    *,
+    backend: str | None = None,
 ) -> tuple[float | None, float | None]:
     """(flops, bytes accessed) of one mode's MTTKRP from the compiled HLO.
 
@@ -145,7 +150,7 @@ def mode_cost_analysis(
             plan = build_mttkrp_plan(tensor, mode)
 
             def fn(*facs):
-                return mttkrp_pallas(tensor, facs, mode, plan=plan, interpret=True)
+                return mttkrp_pallas(tensor, facs, mode, plan=plan, backend=backend)
 
         else:  # ref order; also the stand-in cost for sharded per-shard work
 
@@ -180,6 +185,7 @@ def measure_cp_als(
     tile_nnz: int = 256,
     rows_per_block: int = 256,
     ordering: str | None = None,
+    backend: str | None = None,
     cost_analysis: bool = True,
     fused: bool = False,
     fit_every: int = 1,
@@ -202,6 +208,12 @@ def measure_cp_als(
     strategy, the sharded path lays each shard out in it.  ``None`` keeps
     the impl-native order.  For the degree strategy, relabel the tensor
     (and factors) first — the engine does.
+
+    ``backend`` selects the pallas-path execution backend
+    (``repro.kernels.mttkrp.ops.resolve_backend``); ``None`` resolves to
+    the platform's COMPILED path (the XLA fallback on CPU) — interpret
+    mode is opt-in (``backend="interpret"``), so measured numbers are
+    real kernel wall times, not emulator artifacts (DESIGN.md §13).
 
     ``fused=True`` additionally times the fused executor on the same
     configuration — one cold run (plan build + compile) and one warm run
@@ -255,7 +267,7 @@ def measure_cp_als(
         }
 
         def base(t, f, m):
-            return mttkrp_pallas(t, f, m, plan=plans[m], interpret=True)
+            return mttkrp_pallas(t, f, m, plan=plans[m], backend=backend)
 
     elif impl == "sharded":
         from repro.distributed.mttkrp_dist import mttkrp_sharded
@@ -289,7 +301,7 @@ def measure_cp_als(
         steady = ts[1:] if len(ts) > 1 else ts
         flops = nbytes = None
         if cost_analysis:
-            flops, nbytes = mode_cost_analysis(tensor, rank, m, impl)
+            flops, nbytes = mode_cost_analysis(tensor, rank, m, impl, backend=backend)
         modes.append(
             MeasuredMode(
                 mode=m,
@@ -314,11 +326,12 @@ def measure_cp_als(
             rows_per_block=rows_per_block,
             ordering=ordering,
             scheme=scheme,
-            # The instrumented eager base above runs the pallas kernel with
-            # interpret=True unconditionally; the fused side must match or
-            # on a TPU backend the comparison would measure emulator vs
-            # hardware instead of dispatch overhead.
-            interpret=True if impl == "pallas" else None,
+            # The instrumented eager base above runs the pallas kernel on
+            # ``backend`` (default: the platform's resolved compiled
+            # path); the fused side must resolve the same backend or the
+            # comparison would measure backend deltas instead of dispatch
+            # overhead.
+            backend=backend if impl == "pallas" else None,
         )
         t0 = time.perf_counter()
         executor.run(n_iters=n_iters, tol=0.0, seed=seed, fit_every=fit_every)

@@ -50,6 +50,7 @@ def main() -> int:
         seed=payload["seed"],
         scheme=payload.get("scheme", "mode_ordered"),
         ordering=ordering,
+        backend=payload.get("backend"),
         # cost_analysis lowers the ref closure as a stand-in; the sharded
         # shard_map path is traced eagerly and has no single compiled HLO.
         cost_analysis=False,

@@ -1,0 +1,61 @@
+"""Shared kernel-dispatch helpers (DESIGN.md §13).
+
+One definition of "should Pallas interpret?" for every kernel package —
+the mttkrp and flash_attention ops modules historically carried private
+copies of the platform test, which could drift (and neither honored an
+environment override, so CI could not force a path).
+
+``REPRO_PALLAS_INTERPRET`` overrides the platform default:
+
+  * truthy (``1``/``true``/``yes``/``on``)  — force interpret mode
+    everywhere (the pure-Python Pallas emulator, any backend);
+  * falsy  (``0``/``false``/``no``/``off``) — force the compiled path:
+    kernels with a backend dispatch (``kernels.mttkrp.ops``) route to
+    their platform's compiled lowering (Mosaic / Triton / the XLA
+    fallback); kernels without one (flash_attention) will attempt a
+    native Pallas compile, which requires a TPU/GPU backend;
+  * unset — interpret off-TPU, compiled on TPU (the historical default;
+    the mttkrp dispatch layer further refines off-TPU to its compiled
+    XLA fallback).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["PALLAS_INTERPRET_ENV", "interpret_override", "default_interpret"]
+
+PALLAS_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def interpret_override() -> bool | None:
+    """The ``REPRO_PALLAS_INTERPRET`` override, or ``None`` when unset."""
+    raw = os.environ.get(PALLAS_INTERPRET_ENV)
+    if raw is None:
+        return None
+    val = raw.strip().lower()
+    if val in _TRUTHY:
+        return True
+    if val in _FALSY:
+        return False
+    raise ValueError(
+        f"{PALLAS_INTERPRET_ENV}={raw!r} is neither truthy {_TRUTHY} "
+        f"nor falsy {_FALSY}"
+    )
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    Honors the ``REPRO_PALLAS_INTERPRET`` env override (module docstring)
+    so CI can force either path; otherwise interpret everywhere but TPU.
+    """
+    override = interpret_override()
+    if override is not None:
+        return override
+    return jax.default_backend() != "tpu"

@@ -5,11 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret as _default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def flash_attention(

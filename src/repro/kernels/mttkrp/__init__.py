@@ -1,15 +1,23 @@
+from repro.kernels.mttkrp.compiled import mttkrp_xla_from_plan
 from repro.kernels.mttkrp.ops import (
+    BACKENDS,
     PlanBuffers,
     get_plan,
+    mttkrp_from_plan,
     mttkrp_pallas,
     mttkrp_pallas_from_plan,
     plan_device_buffers,
+    resolve_backend,
 )
 
 __all__ = [
+    "BACKENDS",
     "PlanBuffers",
     "get_plan",
+    "mttkrp_from_plan",
     "mttkrp_pallas",
     "mttkrp_pallas_from_plan",
+    "mttkrp_xla_from_plan",
     "plan_device_buffers",
+    "resolve_backend",
 ]

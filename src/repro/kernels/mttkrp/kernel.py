@@ -2,9 +2,9 @@
 
 TPU-native translation of the paper's accelerator datapath (DESIGN.md §2):
 
-  * the *O-SRAM partial-sum buffer* becomes a VMEM output block revisited
-    across consecutive grid steps (legal because the plan sorts nonzeros by
-    output mode — the paper's Algorithm 1 ordering);
+  * the *O-SRAM partial-sum buffer* becomes a VMEM scratch accumulator
+    carried across consecutive grid steps (legal because the plan sorts
+    nonzeros by output mode — the paper's Algorithm 1 ordering);
   * the *cache subsystem* becomes pre-staged factor rows delivered tile-by-
     tile through the Pallas grid pipeline (automatic HBM→VMEM double
     buffering takes the role of the DMA stream units);
@@ -15,7 +15,17 @@ TPU-native translation of the paper's accelerator datapath (DESIGN.md §2):
 
 Grid: one step per nonzero tile.  Scalar-prefetched ``tile_block`` drives
 the output BlockSpec index map, so each grid step lands on the VMEM block
-holding its output rows; first-visit predication zero-initializes.
+holding its output rows.
+
+**Streaming accumulation** (DESIGN.md §13): per-output-row partial state
+lives in a VMEM scratch accumulator carried through the grid scan — the
+AttentionEngine online-softmax structure, where the running (m, l, acc)
+state rides in scratch across KV tiles.  First tile of a block
+initializes the scratch, interior tiles accumulate into it, and only the
+LAST tile of the block writes ``out_ref`` — one output store per block
+instead of a read-modify-write of the output block on every tile, which
+is both the paper's store-each-row-exactly-once property (Algorithm 1
+line 11) and what lets Mosaic keep the output block write-only.
 """
 
 from __future__ import annotations
@@ -31,11 +41,21 @@ LANE = 128  # TPU lane width — rank is padded to this
 SUBLANE = 8
 
 
-def _kernel(tile_block_ref, vals_ref, local_ref, fac_ref, out_ref, *, nfac: int):
+def _kernel(
+    tile_block_ref, vals_ref, local_ref, fac_ref, out_ref, acc_ref, *, nfac: int
+):
     t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
     blk = tile_block_ref[t]
-    # t==0 short-circuits the (wrapping) t-1 load — first tile always inits.
+    # t==0 short-circuits the (wrapping) t-1 load — the first tile always
+    # initializes, even when the wrapped last tile shares its block.
     first = jnp.logical_or(t == 0, blk != tile_block_ref[t - 1])
+    # Last tile of this output block; the t+1 load is clamped so the final
+    # tile (flushed unconditionally) never indexes past the grid.
+    last = jnp.logical_or(
+        t == num_tiles - 1,
+        tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)] != blk,
+    )
 
     acc_t = jnp.float32
     prod = fac_ref[0].astype(acc_t)
@@ -51,11 +71,15 @@ def _kernel(tile_block_ref, vals_ref, local_ref, fac_ref, out_ref, *, nfac: int)
 
     @pl.when(first)
     def _init():
-        out_ref[...] = contrib
+        acc_ref[...] = contrib
 
     @pl.when(jnp.logical_not(first))
     def _accum():
-        out_ref[...] += contrib
+        acc_ref[...] += contrib
+
+    @pl.when(last)
+    def _flush():
+        out_ref[...] = acc_ref[...]
 
 
 @functools.partial(
@@ -75,11 +99,31 @@ def mttkrp_pallas_call(
 ) -> jax.Array:
     """Returns (num_blocks * rows_per_block, R_pad) float32 partial-sum grid."""
     nfac, nnz_pad, r_pad = gathered.shape
-    assert nnz_pad % tile_nnz == 0, (nnz_pad, tile_nnz)
+    # Geometry checks raise (not assert): they must survive ``python -O``
+    # and fail with the offending shapes instead of an opaque Mosaic or
+    # scatter error from inside the jit trace.
+    if nnz_pad % tile_nnz != 0:
+        raise ValueError(
+            f"nnz_pad={nnz_pad} is not a multiple of tile_nnz={tile_nnz} "
+            "(the plan pads every block to whole tiles — was the gathered "
+            "operand built from a different plan?)"
+        )
     num_tiles = nnz_pad // tile_nnz
-    assert tile_block.shape == (num_tiles,), (tile_block.shape, num_tiles)
-    assert r_pad % LANE == 0, r_pad
-    assert rows_per_block % SUBLANE == 0, rows_per_block
+    if tile_block.shape != (num_tiles,):
+        raise ValueError(
+            f"tile_block shape {tile_block.shape} does not match the "
+            f"{num_tiles} tiles implied by nnz_pad={nnz_pad} / "
+            f"tile_nnz={tile_nnz}"
+        )
+    if r_pad % LANE != 0:
+        raise ValueError(
+            f"gathered rank {r_pad} is not LANE({LANE})-padded"
+        )
+    if rows_per_block % SUBLANE != 0:
+        raise ValueError(
+            f"rows_per_block={rows_per_block} is not a multiple of "
+            f"SUBLANE({SUBLANE})"
+        )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -90,6 +134,7 @@ def mttkrp_pallas_call(
             pl.BlockSpec((nfac, tile_nnz, r_pad), lambda t, tb: (0, t, 0)),
         ],
         out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, r_pad), jnp.float32)],
     )
     out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
     kernel = functools.partial(_kernel, nfac=nfac)

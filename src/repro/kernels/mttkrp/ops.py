@@ -18,7 +18,16 @@ import numpy as np
 
 from repro.core.memo import IdentityKeyedCache
 from repro.core.sparse_tensor import MTTKRPPlan, SparseTensor, build_mttkrp_plan
+from repro.kernels.common import default_interpret, interpret_override
 from repro.kernels.mttkrp.kernel import LANE, mttkrp_pallas_call
+
+#: Execution backends accepted by :func:`resolve_backend` (DESIGN.md §13).
+#:   * ``"mosaic"``    — native Pallas→Mosaic compile (TPU);
+#:   * ``"triton"``    — Pallas→Triton lowering (GPU);
+#:   * ``"xla"``       — the jit-compiled XLA fallback
+#:                       (``kernels.mttkrp.compiled``, any platform);
+#:   * ``"interpret"`` — the pure-Python Pallas emulator (debugging only).
+BACKENDS = ("mosaic", "triton", "xla", "interpret")
 
 # Plan memo per source tensor (repro.core.memo documents the
 # identity-anchoring soundness requirement — a bare id() key caused
@@ -125,8 +134,38 @@ def tensor_device_operands(
     return ops
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# Kept as an alias so existing importers keep working; the one shared
+# definition (env-overridable) lives in repro.kernels.common.
+_default_interpret = default_interpret
+
+
+def _native_compiled_backend() -> str:
+    """The platform's compiled lowering: Mosaic/Triton, else the XLA fallback."""
+    return {"tpu": "mosaic", "gpu": "triton"}.get(jax.default_backend(), "xla")
+
+
+def resolve_backend(
+    backend: str | None = None, *, interpret: bool | None = None
+) -> str:
+    """Resolve the MTTKRP execution backend (DESIGN.md §13).
+
+    Precedence: an explicit ``backend`` wins; else an explicit
+    ``interpret`` flag (``True`` → the emulator, ``False`` → the
+    platform's compiled lowering); else the ``REPRO_PALLAS_INTERPRET``
+    env override; else the platform default — which is COMPILED
+    everywhere: Mosaic on TPU, Triton on GPU, and the XLA fallback on
+    CPU.  (Historically CPU defaulted to interpret mode; now that a
+    compiled path exists on every platform the emulator is opt-in.)
+    """
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"backend={backend!r} not in {BACKENDS}")
+        return backend
+    if interpret is None:
+        interpret = interpret_override()
+    if interpret:
+        return "interpret"
+    return _native_compiled_backend()
 
 
 def get_plan(
@@ -154,10 +193,11 @@ def get_plan(
     return plan
 
 
-def mttkrp_pallas_from_plan(
+def mttkrp_from_plan(
     plan: MTTKRPPlan,
     factors: Sequence[jax.Array],
     *,
+    backend: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """MTTKRP from a plan alone.  Returns (I_mode, R) for ``plan.mode``.
@@ -168,10 +208,26 @@ def mttkrp_pallas_from_plan(
     one per call in the distributed per-shard hot loop).  Plan operands
     come from the per-plan device-buffer memo, so repeated calls (the
     CP-ALS hot path) re-upload nothing.
-    """
-    if interpret is None:
-        interpret = _default_interpret()
 
+    ``backend``/``interpret`` pick the execution path via
+    :func:`resolve_backend`; the XLA fallback consumes the same plan
+    buffers, so switching backends re-stages nothing.
+    """
+    backend = resolve_backend(backend, interpret=interpret)
+    if backend == "xla":
+        from repro.kernels.mttkrp.compiled import mttkrp_xla_from_plan
+
+        return mttkrp_xla_from_plan(plan, factors)
+    return _mttkrp_pallas_exec(plan, factors, interpret=backend == "interpret")
+
+
+def _mttkrp_pallas_exec(
+    plan: MTTKRPPlan,
+    factors: Sequence[jax.Array],
+    *,
+    interpret: bool,
+) -> jax.Array:
+    """The Pallas leg of the dispatch: gather, kernel call, unpad."""
     mode = plan.mode
     rank = factors[0].shape[1]
     r_pad = -(-rank // LANE) * LANE
@@ -198,6 +254,18 @@ def mttkrp_pallas_from_plan(
     return out[:i_out, :rank].astype(factors[mode].dtype)
 
 
+def mttkrp_pallas_from_plan(
+    plan: MTTKRPPlan,
+    factors: Sequence[jax.Array],
+    *,
+    interpret: bool | None = None,
+    backend: str | None = None,
+) -> jax.Array:
+    """Historical name for :func:`mttkrp_from_plan` (kept for callers
+    predating the backend dispatch)."""
+    return mttkrp_from_plan(plan, factors, backend=backend, interpret=interpret)
+
+
 def mttkrp_pallas(
     tensor: SparseTensor,
     factors: Sequence[jax.Array],
@@ -208,13 +276,16 @@ def mttkrp_pallas(
     rows_per_block: int = 256,
     ordering: str = "lex",
     interpret: bool | None = None,
+    backend: str | None = None,
 ) -> jax.Array:
-    """MTTKRP for ``mode`` via the Pallas kernel.  Returns (I_mode, R).
+    """MTTKRP for ``mode`` via the plan-based kernel family.
+    Returns (I_mode, R).
 
     ``ordering`` selects the plan's nonzero execution order (repro.reorder,
     DESIGN.md §10); the kernel accumulates per output block, so any
     block-contiguous order is legal and the result is unchanged up to
-    float summation order.
+    float summation order.  ``backend``/``interpret`` select the
+    execution path (:func:`resolve_backend`).
     """
     if plan is None:
         plan = get_plan(
@@ -224,4 +295,4 @@ def mttkrp_pallas(
             rows_per_block=rows_per_block,
             ordering=ordering,
         )
-    return mttkrp_pallas_from_plan(plan, factors, interpret=interpret)
+    return mttkrp_from_plan(plan, factors, backend=backend, interpret=interpret)

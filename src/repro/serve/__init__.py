@@ -18,6 +18,7 @@ from repro.serve.service import (
     DecompResponse,
     DecompositionService,
     bucket_signature,
+    geometry_signature,
 )
 from repro.serve.traffic import TrafficConfig, replay_trace, synthetic_trace
 
@@ -28,6 +29,7 @@ __all__ = [
     "DecompResponse",
     "DecompositionService",
     "bucket_signature",
+    "geometry_signature",
     "TrafficConfig",
     "replay_trace",
     "synthetic_trace",

@@ -48,6 +48,7 @@ __all__ = [
     "DecompResponse",
     "BucketSignature",
     "bucket_signature",
+    "geometry_signature",
     "DecompositionService",
 ]
 
@@ -132,26 +133,67 @@ class BucketSignature:
         return len(self.dims)
 
 
-def bucket_signature(
-    req: DecompRequest,
+def geometry_signature(
+    shape: Sequence[int],
+    nnz: int,
+    rank: int,
+    n_iters: int = 0,
     *,
     dim_floor: int = 8,
     nnz_floor: int = 64,
     rank_floor: int = 4,
+    tile_align: int | None = None,
 ) -> BucketSignature:
-    """Quantize a request onto its bucket's padded geometry.
+    """Quantize raw tensor geometry onto a padded-geometry band.
 
     Power-of-two banding bounds both the padding waste (< 2x per axis)
     and the number of distinct compiled programs (log in each axis) —
     the classic bucketing trade every shape-specialized serving system
     makes.  The floors keep degenerate tiny requests from fragmenting
     into single-request buckets.
+
+    This is the shared banding primitive: the service keys buckets on it
+    (via :func:`bucket_signature`) and the DSE autotuner keys its tuned
+    tile-config cache on it with ``n_iters=0`` (repro.dse.autotune,
+    DESIGN.md §13) — one definition, so a tensor tuned once maps onto
+    the same band the service buckets it into.
+
+    ``tile_align`` additionally rounds ``nnz_pad`` up to a multiple of
+    the given kernel tile so a tuned plan geometry divides the bucket's
+    padded nonzero stream evenly.
     """
+    nnz_pad = _next_pow2(nnz, nnz_floor)
+    if tile_align is not None:
+        if tile_align < 1:
+            raise ValueError(f"tile_align must be >= 1, got {tile_align}")
+        nnz_pad = -(-nnz_pad // tile_align) * tile_align
     return BucketSignature(
-        dims=tuple(_next_pow2(d, dim_floor) for d in req.tensor.shape),
-        nnz_pad=_next_pow2(req.tensor.nnz, nnz_floor),
-        rank_pad=_next_pow2(req.rank, rank_floor),
-        n_iters=int(req.n_iters),
+        dims=tuple(_next_pow2(d, dim_floor) for d in shape),
+        nnz_pad=nnz_pad,
+        rank_pad=_next_pow2(rank, rank_floor),
+        n_iters=int(n_iters),
+    )
+
+
+def bucket_signature(
+    req: DecompRequest,
+    *,
+    dim_floor: int = 8,
+    nnz_floor: int = 64,
+    rank_floor: int = 4,
+    tile_align: int | None = None,
+) -> BucketSignature:
+    """Quantize a request onto its bucket's padded geometry
+    (:func:`geometry_signature` over the request's tensor/rank/iters)."""
+    return geometry_signature(
+        req.tensor.shape,
+        req.tensor.nnz,
+        req.rank,
+        req.n_iters,
+        dim_floor=dim_floor,
+        nnz_floor=nnz_floor,
+        rank_floor=rank_floor,
+        tile_align=tile_align,
     )
 
 
@@ -260,7 +302,8 @@ class DecompositionService:
         max_inflight: int = 2,
         max_queue: int = 256,
         dtype=jnp.float32,
-        signature_fn: Callable[[DecompRequest], BucketSignature] = bucket_signature,
+        signature_fn: Callable[[DecompRequest], BucketSignature] | None = None,
+        autotuner=None,
         metrics: MetricsLogger | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ) -> None:
@@ -274,7 +317,14 @@ class DecompositionService:
         self.max_inflight = max_inflight
         self.max_queue = max_queue
         self.dtype = dtype
-        self.signature_fn = signature_fn
+        # ``autotuner`` is duck-typed (anything with
+        # ``config_for(tensor, rank) -> cfg`` where ``cfg.tile_nnz`` is an
+        # int — in practice ``repro.dse.autotune.Autotuner``) so the serve
+        # layer never imports the DSE package: buckets align their padded
+        # nonzero stream to the tuned kernel tile, making every bucket
+        # geometry directly executable by a tuned plan.
+        self.autotuner = autotuner
+        self.signature_fn = signature_fn or self._default_signature
         self.metrics = metrics or MetricsLogger("serve", capacity=4096, quiet=True)
         self.clock = clock
 
@@ -287,6 +337,13 @@ class DecompositionService:
         self.rejected = 0
 
     # -- request admission --------------------------------------------------
+
+    def _default_signature(self, req: DecompRequest) -> BucketSignature:
+        tile_align = None
+        if self.autotuner is not None:
+            cfg = self.autotuner.config_for(req.tensor, req.rank)
+            tile_align = int(cfg.tile_nnz)
+        return bucket_signature(req, tile_align=tile_align)
 
     @property
     def queue_depth(self) -> int:

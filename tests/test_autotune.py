@@ -1,0 +1,158 @@
+"""Closed-loop tile autotuner (repro.dse.autotune, DESIGN.md §13)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cp_als import cp_init
+from repro.core.sparse_tensor import random_sparse_tensor
+from repro.dse.autotune import (
+    DEFAULT_TILE_CONFIG,
+    Autotuner,
+    TileConfig,
+    TuneSpace,
+    WallTimeMemo,
+    measure_config,
+    measured_vs_modeled,
+)
+from repro.serve import geometry_signature
+
+# Two non-default configs keeps every tune() in the suite at 3 configs x
+# 3 modes x 1 rep — fast enough to run the real measurement loop.
+SMALL_SPACE = TuneSpace(tile_nnz=(128,), rows_per_block=(64, 128), orderings=("lex",))
+
+
+def _tensor(seed=0, nnz=400):
+    return random_sparse_tensor((37, 29, 23), nnz=nnz, seed=seed)
+
+
+def test_tileconfig_validation_and_label():
+    assert TileConfig(128, 64, "lex").label == "(128,64,lex)"
+    with pytest.raises(ValueError, match="tile_nnz"):
+        TileConfig(0, 64, "lex")
+    with pytest.raises(ValueError, match="rows_per_block"):
+        TileConfig(128, -1, "lex")
+    with pytest.raises(ValueError, match="unknown ordering"):
+        TileConfig(128, 64, "zigzag")
+
+
+def test_tunespace_always_contains_default_first():
+    for space in (TuneSpace(), SMALL_SPACE, TuneSpace(tile_nnz=(), rows_per_block=())):
+        cfgs = space.configs()
+        assert cfgs[0] == DEFAULT_TILE_CONFIG
+        assert len(cfgs) == len(set(cfgs))  # no duplicates
+
+
+def test_walltime_memo_counters():
+    memo = WallTimeMemo()
+    key = memo.key(geometry_signature((8, 8, 8), 64, 4), 0, DEFAULT_TILE_CONFIG, "xla")
+    assert memo.lookup(key) is None
+    assert (memo.hits, memo.misses) == (0, 1)
+    memo.store(key, 0.5)
+    assert memo.lookup(key) == 0.5
+    assert (memo.hits, memo.misses, len(memo)) == (1, 1, 1)
+
+
+def test_measure_config_positive_and_plan_cached():
+    t = _tensor()
+    facs = cp_init(t, 8, seed=0)
+    s = measure_config(t, facs, 0, DEFAULT_TILE_CONFIG, backend="xla", reps=1)
+    assert s > 0.0
+
+
+def test_tune_selects_argmin_and_caches_by_band():
+    tuner = Autotuner(SMALL_SPACE, reps=1)
+    t = _tensor()
+    result = tuner.tune(t, 8)
+    assert set(result.timings) == set(SMALL_SPACE.configs())
+    assert result.best_s == min(result.timings.values())
+    # structural gate: the default is in the swept set, so tuned <= default
+    assert result.best_s <= result.default_s
+    assert result.speedup_vs_default >= 1.0
+
+    # Same band -> cached result object, no new measurements.
+    misses_after_first = tuner.memo.misses
+    assert tuner.tune(t, 8) is result
+    assert tuner.memo.misses == misses_after_first
+
+    # force=True re-runs the sweep but answers every cell from the memo.
+    hits_before = tuner.memo.hits
+    forced = tuner.tune(t, 8, force=True)
+    assert forced.best == result.best
+    assert tuner.memo.misses == misses_after_first
+    assert tuner.memo.hits > hits_before
+
+    # A geometrically similar tensor lands in the same band: answered from
+    # the cache (the forced re-tune replaced the stored result object).
+    t2 = _tensor(seed=5, nnz=410)
+    assert tuner.signature_of(t2, 8) == result.signature
+    assert tuner.tune(t2, 8) is forced
+
+
+def test_config_for_answers_cheaply_on_miss():
+    tuner = Autotuner(SMALL_SPACE, reps=1)
+    t = _tensor()
+    # Untuned band: the default config, with zero measurements taken.
+    assert tuner.config_for(t, 8) == DEFAULT_TILE_CONFIG
+    assert len(tuner.memo) == 0
+    best = tuner.tune(t, 8).best
+    assert tuner.config_for(t, 8) == best
+
+
+def test_config_for_tune_on_miss():
+    tuner = Autotuner(SMALL_SPACE, reps=1, tune_on_miss=True)
+    t = _tensor()
+    cfg = tuner.config_for(t, 8)
+    assert tuner.results  # the miss triggered a real tune
+    assert cfg == next(iter(tuner.results.values())).best
+
+
+def test_tuner_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend='hexagon'"):
+        Autotuner(SMALL_SPACE, backend="hexagon")
+
+
+def test_geometry_signature_tile_align():
+    base = geometry_signature((100, 50, 30), 1000, 16)
+    aligned = geometry_signature((100, 50, 30), 1000, 16, tile_align=384)
+    assert base.nnz_pad == 1024  # next pow2
+    assert aligned.nnz_pad == 1152  # rounded up to a multiple of 384
+    assert aligned.nnz_pad % 384 == 0
+    assert aligned.dims == base.dims and aligned.rank_pad == base.rank_pad
+    # pow2 tiles divide the pow2 band: alignment is then a no-op
+    assert geometry_signature((100, 50, 30), 1000, 16, tile_align=256) == base
+    with pytest.raises(ValueError, match="tile_align"):
+        geometry_signature((100, 50, 30), 1000, 16, tile_align=0)
+
+
+def test_serve_buckets_align_to_tuned_tile():
+    """The service's default signature consults the duck-typed autotuner
+    and aligns the bucket's padded nonzero stream to the tuned tile."""
+    from repro.serve import DecompositionService
+    from repro.serve.service import DecompRequest
+
+    class StubTuner:
+        def config_for(self, tensor, rank):
+            return TileConfig(tile_nnz=384, rows_per_block=64)
+
+    t = _tensor(nnz=1000)
+    req = DecompRequest("r0", t, rank=8, n_iters=2)
+    plain = DecompositionService().signature_fn(req)
+    tuned = DecompositionService(autotuner=StubTuner()).signature_fn(req)
+    assert plain.nnz_pad % 384 != 0  # the alignment is not vacuous
+    assert tuned.nnz_pad % 384 == 0
+    assert tuned.nnz_pad >= plain.nnz_pad
+
+
+def test_measured_vs_modeled_rows():
+    tuner = Autotuner(SMALL_SPACE, reps=1)
+    t = _tensor()
+    result = tuner.tune(t, 8)
+    rows = measured_vs_modeled(t, result, rank=8, name="unit")
+    assert len(rows) == len(SMALL_SPACE.configs())
+    assert sum(r["best"] for r in rows) == 1
+    for r in rows:
+        assert r["measured_s"] > 0.0
+        assert np.isfinite(r["modeled_s"]) and r["modeled_s"] > 0.0
+    # The analytic model prices the ordering axis only: one modeled value
+    # per ordering, shared by every tile geometry under it.
+    assert len({r["modeled_s"] for r in rows if r["ordering"] == "lex"}) == 1

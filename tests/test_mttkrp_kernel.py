@@ -215,3 +215,132 @@ def test_plan_device_buffers_uploaded_once():
     # A distinct plan (even with identical contents) gets its own buffers.
     plan2 = build_mttkrp_plan(t, 0, tile_nnz=64, rows_per_block=8)
     assert plan_device_buffers(plan2) is not a
+
+
+# --- backend dispatch + edge geometry on BOTH execution paths -------------
+# (DESIGN.md §13: the interpret emulator and the compiled XLA fallback
+# must agree on the exact cases where the streaming-accumulation
+# predication is easiest to get wrong.)
+
+EDGE_BACKENDS = ("interpret", "xla")
+
+
+@pytest.mark.parametrize("backend", EDGE_BACKENDS)
+def test_single_tile_single_block(backend):
+    # num_tiles == 1: the only tile is simultaneously first (t==0) and
+    # last (t==num_tiles-1) — init and flush fire on the same grid step.
+    t = random_sparse_tensor((30, 20, 10), nnz=40, seed=31)
+    facs = _factors(t.shape, 8, seed=31)
+    got = mttkrp_pallas(
+        t, facs, 0, tile_nnz=64, rows_per_block=32, backend=backend
+    )
+    want = mttkrp_ref(t, facs, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", EDGE_BACKENDS)
+def test_t0_wrap_predication(backend):
+    # Every nonzero lands in output block 0 across MULTIPLE tiles, so the
+    # wrapping t-1 load at t==0 sees the LAST tile — which shares block 0.
+    # Without the t==0 short-circuit the first tile would accumulate into
+    # uninitialized scratch instead of initializing it.
+    rng = np.random.default_rng(32)
+    from repro.core.sparse_tensor import SparseTensor
+
+    idx = np.stack(
+        [
+            rng.integers(0, 30, size=300),  # all rows < rows_per_block=32
+            rng.integers(0, 25, size=300),
+            rng.integers(0, 25, size=300),
+        ],
+        axis=1,
+    ).astype(np.int32)
+    t = SparseTensor(idx, rng.standard_normal(300).astype(np.float32), (32, 25, 25))
+    facs = _factors(t.shape, 8, seed=32)
+    got = mttkrp_pallas(
+        t, facs, 0, tile_nnz=64, rows_per_block=32, backend=backend
+    )
+    want = mttkrp_ref(t, facs, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", EDGE_BACKENDS)
+def test_rank_exactly_lane(backend):
+    # rank == LANE(128): zero padding columns — the r_pad % LANE check
+    # passes on the exact boundary and the full lane width is live data.
+    from repro.kernels.mttkrp.kernel import LANE
+
+    t = random_sparse_tensor((20, 15, 10), nnz=100, seed=33)
+    facs = _factors(t.shape, LANE, seed=33)
+    got = mttkrp_pallas(
+        t, facs, 0, tile_nnz=64, rows_per_block=16, backend=backend
+    )
+    assert got.shape == (t.shape[0], LANE)
+    want = mttkrp_ref(t, facs, 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_backends_bitwise_consistent_with_ref_tolerance():
+    # The two CPU paths must agree with each other at least as tightly as
+    # either agrees with the oracle (same f32 accumulation tree per tile).
+    t = random_sparse_tensor((37, 29, 23), nnz=500, seed=34)
+    facs = _factors(t.shape, 16, seed=34)
+    a = np.asarray(mttkrp_pallas(t, facs, 0, backend="interpret"))
+    b = np.asarray(mttkrp_pallas(t, facs, 0, backend="xla"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_call_geometry_valueerrors():
+    """Geometry violations raise ValueError with the offending shapes
+    (replacing bare asserts that vanish under ``python -O``)."""
+    from repro.kernels.mttkrp.kernel import mttkrp_pallas_call
+
+    tile_block = jnp.zeros((4,), jnp.int32)
+    values = jnp.zeros((256,), jnp.float32)
+    local = jnp.zeros((256,), jnp.int32)
+    gathered = jnp.zeros((2, 256, 128), jnp.float32)
+    ok = dict(tile_nnz=64, rows_per_block=32, num_blocks=1, interpret=True)
+
+    with pytest.raises(ValueError, match="not a multiple of tile_nnz=96"):
+        mttkrp_pallas_call(tile_block, values, local, gathered,
+                           **{**ok, "tile_nnz": 96})
+    with pytest.raises(ValueError, match="tile_block shape"):
+        mttkrp_pallas_call(tile_block[:-1], values, local, gathered, **ok)
+    with pytest.raises(ValueError, match=r"not LANE\(128\)-padded"):
+        mttkrp_pallas_call(
+            tile_block, values, local, jnp.zeros((2, 256, 64), jnp.float32), **ok
+        )
+    with pytest.raises(ValueError, match=r"SUBLANE\(8\)"):
+        mttkrp_pallas_call(tile_block, values, local, gathered,
+                           **{**ok, "rows_per_block": 12})
+
+
+def test_resolve_backend_precedence(monkeypatch):
+    from repro.kernels.common import PALLAS_INTERPRET_ENV
+    from repro.kernels.mttkrp.ops import resolve_backend
+
+    monkeypatch.delenv(PALLAS_INTERPRET_ENV, raising=False)
+    native = resolve_backend(None)
+    assert native in ("mosaic", "triton", "xla")  # compiled default everywhere
+    if jax.default_backend() == "cpu":
+        assert native == "xla"
+
+    # explicit backend beats everything, including the interpret flag
+    assert resolve_backend("interpret") == "interpret"
+    assert resolve_backend("xla", interpret=True) == "xla"
+    with pytest.raises(ValueError, match="backend='cuda'"):
+        resolve_backend("cuda")
+
+    # explicit interpret flag
+    assert resolve_backend(None, interpret=True) == "interpret"
+    assert resolve_backend(None, interpret=False) == native
+
+    # env override (only consulted when neither explicit input is given)
+    monkeypatch.setenv(PALLAS_INTERPRET_ENV, "1")
+    assert resolve_backend(None) == "interpret"
+    assert resolve_backend(None, interpret=False) == native
+    monkeypatch.setenv(PALLAS_INTERPRET_ENV, "0")
+    assert resolve_backend(None) == native
+    monkeypatch.setenv(PALLAS_INTERPRET_ENV, "maybe")
+    with pytest.raises(ValueError, match=PALLAS_INTERPRET_ENV):
+        resolve_backend(None)
