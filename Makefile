@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke controller controller-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -53,6 +53,19 @@ autotune:
 # CI smoke: same gates on one tensor and a 2x2 tune grid.
 autotune-smoke:
 	$(PY) scripts/run_autotune.py --quick --out /tmp/BENCH_autotune_smoke.json
+
+# Cycle-level memory-controller simulator (repro.model.controller):
+# calibration reconciliation vs the analytic hierarchy, paper bands
+# under the cycle model, bank-conflict-by-ordering, and a policy x
+# prefetch sweep -> BENCH_controller.json; exits nonzero unless the
+# reconciliation tolerance, the Fig 7/8 bands, and the ordering gate all
+# hold (DESIGN.md §14).
+controller:
+	$(PY) scripts/run_controller.py --out BENCH_controller.json
+
+# CI smoke: same gates, NELL-2-only cells and a smaller conflict tensor.
+controller-smoke:
+	$(PY) scripts/run_controller.py --quick --out /tmp/BENCH_controller_smoke.json
 
 # Verify every `DESIGN.md §N` citation in the code resolves to a heading.
 docs-check:

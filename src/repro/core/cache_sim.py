@@ -32,7 +32,9 @@ import numpy as np
 __all__ = [
     "CacheConfig",
     "CacheStats",
+    "TraceFlags",
     "simulate_trace",
+    "simulate_trace_flags",
     "simulate_traces",
     "che_hit_rate",
 ]
@@ -175,6 +177,126 @@ def _simulate_single_line_rows(rows: np.ndarray, n_sets: int, assoc: int) -> Cac
                 del lru[next(iter(lru))]  # evict true LRU (oldest key)
             lru[line] = None
     return CacheStats(accesses=int(rows.size), hits=hits, cold_misses=cold)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceFlags:
+    """Per-access outcome of ``simulate_trace_flags``.
+
+    ``hits[i]`` is the LRU hit/miss of access ``i`` of the trace;
+    ``prefetch_fills[i]`` counts the lines the prefetcher inserted on
+    behalf of access ``i`` (0 unless the access missed and
+    ``prefetch_depth > 0``).  Aggregates match ``simulate_trace`` exactly
+    when prefetching is off (tests/test_controller.py).
+    """
+
+    hits: np.ndarray  # bool[N]
+    prefetch_fills: np.ndarray  # int32[N]
+    trace: np.ndarray  # int64[N] — the replayed row stream
+
+    @property
+    def stats(self) -> CacheStats:
+        # Compulsory misses: first-ever touches that missed (with
+        # prefetching, a first touch can hit — the fill already paid).
+        _, first = np.unique(self.trace, return_index=True)
+        return CacheStats(
+            accesses=int(self.hits.size),
+            hits=int(self.hits.sum()),
+            cold_misses=int(np.count_nonzero(~self.hits[first])),
+        )
+
+
+def simulate_trace_flags(
+    trace: np.ndarray,
+    cfg: CacheConfig = CacheConfig(),
+    *,
+    row_bytes: int = 64,
+    prefetch_depth: int = 0,
+    catalog_rows: int | None = None,
+) -> TraceFlags:
+    """Per-access hit flags of the LRU simulation, with optional next-line
+    prefetch — the trace-consumer the cycle-level controller model
+    (repro.model.controller, DESIGN.md §14) replays through banked queues.
+
+    Same replacement policy as ``simulate_trace``; with
+    ``prefetch_depth=0`` the two agree access-for-access, which is what
+    pins the controller's degenerate configuration to the analytic
+    hierarchy.  Rows must fit one line (``row_bytes <= line_bytes``, the
+    paper's R=16 fp32 rows in 64 B lines): the controller issues requests
+    at row granularity and a multi-line row would split one request
+    across banks.
+
+    ``prefetch_depth=D`` models a sequential next-line prefetcher: a miss
+    on row ``r`` additionally fills rows ``r+1 .. r+D`` (bounded by
+    ``catalog_rows``) into their sets as MRU, evicting LRU lines.  Fills
+    of already-resident lines are free.  Prefetch traffic is charged by
+    the caller from ``prefetch_fills`` (fills move DRAM bytes); future
+    accesses to prefetched lines hit.  The prefetching path is inherently
+    sequential (a fill in one set is triggered by a miss in another, so
+    sets cannot be simulated independently); the ``prefetch_depth=0``
+    path reuses the vectorized per-set grouping of ``simulate_trace``.
+    """
+    rows = np.asarray(trace, dtype=np.int64)
+    n_sets = cfg.num_sets
+    assoc = cfg.associativity
+    lines_per_row = max(1, -(-row_bytes // cfg.line_bytes))
+    if lines_per_row != 1:
+        raise ValueError(
+            f"simulate_trace_flags needs single-line rows: row_bytes="
+            f"{row_bytes} spans {lines_per_row} lines of {cfg.line_bytes} B"
+        )
+    if prefetch_depth < 0:
+        raise ValueError(f"prefetch_depth must be >= 0, got {prefetch_depth}")
+    flags = np.zeros(rows.size, dtype=bool)
+    fills = np.zeros(rows.size, dtype=np.int32)
+    if rows.size == 0:
+        return TraceFlags(hits=flags, prefetch_fills=fills, trace=rows)
+
+    if prefetch_depth == 0:
+        # Vectorized per-set grouping, as in _simulate_single_line_rows.
+        sets = rows % n_sets
+        order = np.argsort(sets, kind="stable")
+        grouped = rows[order]
+        boundaries = np.flatnonzero(np.diff(sets[order])) + 1
+        pos = 0
+        for seg in np.split(grouped, boundaries):
+            lru: dict[int, None] = {}
+            for j, line in enumerate(seg.tolist()):
+                if line in lru:
+                    flags[order[pos + j]] = True
+                    del lru[line]  # re-insertion moves it to MRU position
+                elif len(lru) >= assoc:
+                    del lru[next(iter(lru))]  # evict true LRU
+                lru[line] = None
+            pos += len(seg)
+        return TraceFlags(hits=flags, prefetch_fills=fills, trace=rows)
+
+    limit = int(catalog_rows) if catalog_rows is not None else None
+    sets_lru: list[dict[int, None]] = [dict() for _ in range(n_sets)]
+    for i, line in enumerate(rows.tolist()):
+        lru = sets_lru[line % n_sets]
+        if line in lru:
+            flags[i] = True
+            del lru[line]
+            lru[line] = None
+            continue
+        if len(lru) >= assoc:
+            del lru[next(iter(lru))]
+        lru[line] = None
+        n_fills = 0
+        for d in range(1, prefetch_depth + 1):
+            nxt = line + d
+            if limit is not None and nxt >= limit:
+                break
+            plru = sets_lru[nxt % n_sets]
+            if nxt in plru:
+                continue  # already resident: no fill, LRU order untouched
+            if len(plru) >= assoc:
+                del plru[next(iter(plru))]
+            plru[nxt] = None
+            n_fills += 1
+        fills[i] = n_fills
+    return TraceFlags(hits=flags, prefetch_fills=fills, trace=rows)
 
 
 def simulate_traces(

@@ -30,6 +30,20 @@ class FrosttTensor:
     density: float
     zipf_alpha: float  # index popularity skew (see module docstring)
 
+    def __post_init__(self):
+        # A density outside (0, 1] is always an upstream arithmetic bug —
+        # the classic one being a dense volume computed with np.prod,
+        # which wraps to a negative int64 once the shape product passes
+        # 2**63 (NELL-1-scale dims).  Fail at record construction, not
+        # three layers later in a pricing table.
+        if not 0.0 < self.density <= 1.0:
+            raise ValueError(
+                f"{self.name}: density must be in (0, 1], got "
+                f"{self.density!r} (int-overflowed volume?)"
+            )
+        if self.nnz < 1:
+            raise ValueError(f"{self.name}: nnz must be >= 1, got {self.nnz}")
+
     @property
     def nmodes(self) -> int:
         return len(self.dims)

@@ -10,7 +10,12 @@ axes sweepable (DESIGN.md §8):
     ``AcceleratorConfig`` / ``SystemConstants``, plus hierarchy-level
     axes (``level_axis_points``, ``add_level_point``,
     ``drop_level_point`` — DESIGN.md §9); the paper's E-SRAM vs O-SRAM
-    comparison is the trivial 2-point sweep (``paper_pair``);
+    comparison is the trivial 2-point sweep (``paper_pair``); the
+    memory-controller knobs (``n_banks``, ``bank_policy``,
+    ``prefetch_depth``, ``reorder_buffer``) are axes too, pricing
+    points through the cycle-level simulator of
+    ``repro.model.controller`` (DESIGN.md §14) — such points need
+    ``trace_tensors=`` in the evaluator;
   * ``repro.dse.evaluator`` — resolves every point to its
     ``repro.core.hierarchy.MemoryHierarchy`` and prices all cells through
     the one batched engine, with hit rates memoized per ``CacheGeometry``

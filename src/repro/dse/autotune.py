@@ -35,6 +35,7 @@ characteristics record, returning rows with both numbers per config.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Mapping, Sequence
 
@@ -125,9 +126,17 @@ class WallTimeMemo:
 
     @staticmethod
     def key(
-        signature: BucketSignature, mode: int, config: TileConfig, backend: str
+        signature: BucketSignature,
+        mode: int,
+        config: TileConfig,
+        backend: str,
+        reps: int,
     ) -> tuple:
-        return (signature, mode, config, backend)
+        # ``reps`` is part of the measurement protocol, not a detail: a
+        # median over 3 fenced calls and one over 20 are different
+        # estimators, and a memo that conflates them answers reps=20
+        # requests with reps=3 numbers.
+        return (signature, mode, config, backend, reps)
 
     def lookup(self, key: tuple) -> float | None:
         if key in self._store:
@@ -183,6 +192,12 @@ class TuneResult:
     backend: str
     best: TileConfig
     timings: Mapping[TileConfig, float]  # summed over tuned modes
+    # Which modes the timings cover.  A partial-mode result is a valid
+    # answer to the call that asked for it but NOT a valid band cache
+    # entry: the band winner must rank configs on a full CP-ALS sweep's
+    # worth of work, or a mode-0-only argmin silently serves every
+    # future request for the band.
+    modes: tuple[int, ...] = ()
 
     @property
     def best_s(self) -> float:
@@ -200,6 +215,7 @@ class TuneResult:
         return {
             "signature": dataclasses.asdict(self.signature),
             "backend": self.backend,
+            "modes": list(self.modes),
             "best": dataclasses.asdict(self.best),
             "best_s": self.best_s,
             "default_s": self.default_s,
@@ -270,21 +286,29 @@ class Autotuner:
         Timings sum the per-mode fenced medians over ``modes`` (default:
         all modes — one CP-ALS sweep's worth of MTTKRP work).  Cells
         already measured for this band come from the ``WallTimeMemo``.
+
+        Only full-mode results enter the band cache: a partial-mode
+        argmin is an answer to this call, not to every future
+        ``config_for`` in the band.  ``force=True`` re-measures — it
+        bypasses both the result cache AND the wall-time memo (a forced
+        re-tune that answers from stale measurements isn't a re-tune) and
+        overwrites the memo cells with fresh numbers.
         """
         from repro.core.cp_als import cp_init
 
         sig = self.signature_of(tensor, rank)
-        if not force and sig in self.results:
+        all_modes = tuple(range(tensor.nmodes))
+        modes = all_modes if modes is None else tuple(int(m) for m in modes)
+        covers_band = modes == all_modes
+        if not force and covers_band and sig in self.results:
             return self.results[sig]
-        if modes is None:
-            modes = range(tensor.nmodes)
         factors = cp_init(tensor, rank, seed=seed)
         timings: dict[TileConfig, float] = {}
         for cfg in self.space.configs():
             total = 0.0
             for m in modes:
-                key = self.memo.key(sig, m, cfg, self.backend)
-                s = self.memo.lookup(key)
+                key = self.memo.key(sig, m, cfg, self.backend, self.reps)
+                s = None if force else self.memo.lookup(key)
                 if s is None:
                     s = self.memo.store(
                         key,
@@ -301,9 +325,14 @@ class Autotuner:
             timings[cfg] = total
         best = min(timings, key=lambda c: (timings[c], c != DEFAULT_TILE_CONFIG))
         result = TuneResult(
-            signature=sig, backend=self.backend, best=best, timings=timings
+            signature=sig,
+            backend=self.backend,
+            best=best,
+            timings=timings,
+            modes=modes,
         )
-        self.results[sig] = result
+        if covers_band:
+            self.results[sig] = result
         return result
 
 
@@ -326,11 +355,16 @@ def measured_vs_modeled(
     ordering axis — the model has no concept of tile geometry, which is
     exactly why the measured column exists (DESIGN.md §13).
     """
+    # math.prod over Python ints: np.prod would wrap to int64 (or go
+    # negative) once the dense volume passes 2**63 — easily reached by
+    # realistic FROSTT shapes (NELL-1 is ~2.4e6 x 2.1e6 x 2.5e7) — and a
+    # negative volume turns density into garbage.
+    volume = math.prod(int(d) for d in tensor.shape)
     chars = FrosttTensor(
         name=name,
         dims=tuple(int(d) for d in tensor.shape),
         nnz=int(tensor.nnz),
-        density=float(tensor.nnz / max(1, np.prod([int(d) for d in tensor.shape]))),
+        density=float(tensor.nnz / max(1, volume)),
         zipf_alpha=zipf_alpha,
     )
     orderings = sorted({cfg.ordering for cfg in result.timings})

@@ -388,8 +388,25 @@ def evaluate_sweep(
         )
     hiers = [p.hierarchy() for p in points]
 
+    # Controller points (DESIGN.md §14) are priced by the cycle-level
+    # event loop, not the closed-form batch engine: they replay the exact
+    # per-nonzero request stream, so they need an executable tensor for
+    # every workload (there is no Che fallback — banking and prefetch are
+    # meaningless against a steady-state hit probability).
+    ctrl_idx = [i for i, p in enumerate(points) if p.controller is not None]
+    if ctrl_idx:
+        missing = [n for n in tensors if n not in trace_tensors]
+        if missing:
+            raise ValueError(
+                f"controller-axis sweep points need executable trace "
+                f"tensors for every workload; missing: {missing} "
+                f"(pass trace_tensors=..., DESIGN.md §14)"
+            )
+
     groups: dict[tuple, list[int]] = {}
     for i, h in enumerate(hiers):
+        if i in set(ctrl_idx):
+            continue
         groups.setdefault(h.batch_signature(), []).append(i)
 
     cells: dict[tuple[int, str], PointTensorResult] = {}
@@ -426,5 +443,25 @@ def evaluate_sweep(
                     energy_j=energy,
                     energy_breakdown=breakdown,
                 )
+    for i in ctrl_idx:
+        from repro.model.controller import simulate_controller
+
+        p = points[i]
+        for name, tensor in tensors.items():
+            run = simulate_controller(
+                trace_tensors[name],
+                hiers[i],
+                config=p.controller,
+                rank=p.rank,
+                chars=tensor,
+                ordering=p.ordering,
+            )
+            cells[(i, name)] = PointTensorResult(
+                label=p.label,
+                tensor=name,
+                mode_times=tuple(r.as_mode_time() for r in run.mode_results),
+                energy_j=run.energy_j,
+                energy_breakdown=run.energy_breakdown,
+            )
     results = [cells[(i, name)] for i in range(len(points)) for name in tensors]
     return SweepResult(results=results, cache=cache)

@@ -40,6 +40,7 @@ from repro.core.memory_tech import (
     TpuSpec,
 )
 from repro.data.frostt import PAPER_RANK
+from repro.model.controller import POLICIES, ControllerConfig, paper_controller
 from repro.reorder import ORDERINGS
 
 __all__ = [
@@ -56,8 +57,9 @@ __all__ = [
 
 # axis name -> (layer, dataclass field).  Layers: "tech" (MemoryTechSpec),
 # "tpu" (TpuSpec), "cache" (AcceleratorConfig.cache), "accel"
-# (AcceleratorConfig), "system" (SystemConstants), "run" (evaluation
-# parameters, i.e. rank).
+# (AcceleratorConfig), "system" (SystemConstants), "controller"
+# (repro.model.ControllerConfig — prices points through the cycle-level
+# simulator, DESIGN.md §14), "run" (evaluation parameters, i.e. rank).
 SWEEP_AXES: dict[str, tuple[str, str]] = {
     "frequency": ("tech", "frequency_hz"),
     "wavelengths": ("tech", "wavelengths"),
@@ -80,6 +82,15 @@ SWEEP_AXES: dict[str, tuple[str, str]] = {
     "hbm_bw": ("tpu", "hbm_bw"),
     "vmem_bytes": ("tpu", "vmem_bytes"),
     "peak_flops": ("tpu", "peak_bf16_flops"),
+    # Memory-controller axes (repro.model.controller, DESIGN.md §14).
+    # Naming any of these switches the point to cycle-level pricing: the
+    # evaluator replays the exact request trace through the banked event
+    # loop instead of the closed-form Eq-1 rates, so these require the
+    # exact-trace path (an executable tensor + an fpga-family base).
+    "n_banks": ("controller", "n_banks"),
+    "bank_policy": ("controller", "bank_conflict_policy"),
+    "prefetch_depth": ("controller", "prefetch_depth"),
+    "reorder_buffer": ("controller", "reorder_buffer_depth"),
 }
 
 # Default value grids used by benchmarks/dse_sweep.py when the caller
@@ -103,6 +114,10 @@ DEFAULT_AXIS_VALUES: dict[str, tuple[Any, ...]] = {
     "hbm_bw": (409.5e9, 819e9, 1638e9),
     "vmem_bytes": (64 * 2**20, 128 * 2**20, 256 * 2**20),
     "peak_flops": (98.5e12, 197e12, 394e12),
+    "n_banks": (1, 4, 12, 24),
+    "bank_policy": POLICIES,
+    "prefetch_depth": (0, 1, 2, 4),
+    "reorder_buffer": (1, 8, 32, 128),
 }
 
 
@@ -131,6 +146,11 @@ class SweepPoint:
     # Nonzero execution-order strategy (repro.reorder, DESIGN.md §10);
     # consumed by the evaluator's trace hit-rate method.
     ordering: str = "lex"
+    # When set, the evaluator prices this point through the cycle-level
+    # controller simulator (repro.model.controller, DESIGN.md §14)
+    # instead of the closed-form Eq-1 engine.  Needs an executable
+    # tensor and an fpga-family hierarchy.
+    controller: ControllerConfig | None = None
     overrides: tuple[tuple[str, Any], ...] = ()
 
     def hierarchy(self) -> MemoryHierarchy:
@@ -184,6 +204,13 @@ class SweepSpec:
             raise ValueError(
                 f"unknown ordering strategies {bad}; known: {list(ORDERINGS)}"
             )
+        bad_pol = [
+            v for v in self.axes.get("bank_policy", ()) if v not in POLICIES
+        ]
+        if bad_pol:
+            raise ValueError(
+                f"unknown bank policies {bad_pol}; known: {list(POLICIES)}"
+            )
 
     def num_points(self) -> int:
         n = 1
@@ -196,7 +223,7 @@ class SweepSpec:
         out = []
         for combo in itertools.product(*(self.axes[a] for a in names)):
             overrides = tuple(zip(names, combo))
-            tech, accel, system, rank, ordering = self._apply(overrides)
+            tech, accel, system, rank, ordering, controller = self._apply(overrides)
             label = f"{self.base_tech.name}[" + ",".join(
                 f"{a}={_fmt_value(v)}" for a, v in overrides
             ) + "]"
@@ -208,6 +235,7 @@ class SweepSpec:
                     system=system,
                     rank=rank,
                     ordering=ordering,
+                    controller=controller,
                     overrides=overrides,
                 )
             )
@@ -215,11 +243,19 @@ class SweepSpec:
 
     def _apply(
         self, overrides: tuple[tuple[str, Any], ...]
-    ) -> tuple[MemoryTechSpec | TpuSpec, AcceleratorConfig, SystemConstants, int, str]:
+    ) -> tuple[
+        MemoryTechSpec | TpuSpec,
+        AcceleratorConfig,
+        SystemConstants,
+        int,
+        str,
+        ControllerConfig | None,
+    ]:
         tech_kw: dict[str, Any] = {}
         cache_kw: dict[str, Any] = {}
         accel_kw: dict[str, Any] = {}
         system_kw: dict[str, Any] = {}
+        ctrl_kw: dict[str, Any] = {}
         rank = self.rank
         ordering = self.ordering
         for axis, value in overrides:
@@ -232,6 +268,8 @@ class SweepSpec:
                 accel_kw[field] = value
             elif layer == "system":
                 system_kw[field] = value
+            elif layer == "controller":
+                ctrl_kw[field] = value
             elif field == "ordering":  # run layer
                 ordering = str(value)
             else:  # run: rank
@@ -247,7 +285,15 @@ class SweepSpec:
             if system_kw
             else self.base_system
         )
-        return tech, accel, system, rank, ordering
+        # Controller axes start from the paper controller of the point's
+        # (possibly accel-overridden) configuration, so e.g. sweeping
+        # prefetch_depth alone keeps n_banks = n_pe * n_caches.
+        controller = (
+            dataclasses.replace(paper_controller(accel), **ctrl_kw)
+            if ctrl_kw
+            else None
+        )
+        return tech, accel, system, rank, ordering, controller
 
 
 def paper_pair(

@@ -9,9 +9,15 @@ evaluator, and reconciles measured against modeled:
   * ``repro.experiments.engine``  — orchestration, pricing, residuals,
     the ``BENCH_experiments.json`` payload;
   * ``repro.experiments.worker``  — subprocess entry point for the
-    8-device sharded measurement.
+    8-device sharded measurement;
+  * ``repro.experiments.reconcile`` — the cycle-level controller
+    simulator (``repro.model.controller``, DESIGN.md §14) gated against
+    the closed-form hierarchy under its calibration configuration
+    (``CONTROLLER_RECON_TOL``), mirroring the Che-vs-trace gate one
+    layer down.
 
-Driven by ``scripts/run_experiments.py`` (``make experiments``).
+Driven by ``scripts/run_experiments.py`` (``make experiments``) and
+``scripts/run_controller.py`` (``make controller``).
 """
 
 from repro.experiments.engine import (
@@ -23,6 +29,11 @@ from repro.experiments.engine import (
     RunResult,
     TechReconciliation,
     run_experiments,
+)
+from repro.experiments.reconcile import (
+    CONTROLLER_RECON_TOL,
+    ControllerReconciliation,
+    reconcile_controller,
 )
 from repro.experiments.measure import (
     ExecutedTraceHitRates,
@@ -44,6 +55,9 @@ __all__ = [
     "RunResult",
     "TechReconciliation",
     "run_experiments",
+    "CONTROLLER_RECON_TOL",
+    "ControllerReconciliation",
+    "reconcile_controller",
     "ExecutedTraceHitRates",
     "MeasuredMode",
     "MeasuredRun",

@@ -1,0 +1,150 @@
+"""Cycle-model vs analytic-hierarchy reconciliation (DESIGN.md §14).
+
+The experiment engine gates Che's approximation against exact executed
+traces (``CHE_VS_TRACE_TOL = 0.10``); this module is the same discipline
+one layer down: the event-driven controller simulator
+(``repro.model.controller``) replayed under its Eq-1-consistent
+calibration configuration (work-conserving fifo over ``n_units`` banks,
+no prefetch) must land within ``CONTROLLER_RECON_TOL`` relative on total
+modeled seconds against the closed-form hierarchy engine, per (workload,
+technology), on every ``EXPERIMENT_SCALES`` tensor.
+
+The residual the gate tolerates is structural and one-sided: the event
+loop sums per-window maxima where the closed form takes the maximum of
+per-mode sums, so phased streams (cold-start misses, hot-row bursts) can
+only make the cycle model slower, never faster.  A reconciliation outside
+the gate means the two engines disagree about the *steady state* — a bug,
+not a modeling nuance — which is exactly what the gate is for.
+
+``scripts/run_controller.py`` (``make controller``) drives this and
+commits the result to ``BENCH_controller.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accelerator import PAPER_ACCEL, AcceleratorConfig
+from repro.core.hierarchy import fpga_hierarchy, hierarchy_mode_time
+from repro.core.memory_tech import E_SRAM, O_SRAM, PAPER_SYSTEM, MemoryTechSpec
+from repro.data.frostt import PAPER_RANK
+from repro.data.synthetic_tensors import (
+    EXPERIMENT_SCALES,
+    make_frostt_like,
+    scaled_characteristics,
+)
+from repro.dse.evaluator import exact_hit_rates_for_geometry
+from repro.model.controller import (
+    ControllerConfig,
+    ControllerRunResult,
+    calibration_controller,
+    simulate_controller,
+)
+
+__all__ = [
+    "CONTROLLER_RECON_TOL",
+    "ControllerReconciliation",
+    "reconcile_controller",
+]
+
+# Mirrors CHE_VS_TRACE_TOL (0.10) one layer down; slightly wider because
+# the event loop's sum-of-window-maxima legitimately exceeds the closed
+# form on phased streams.  Measured residuals on the EXPERIMENT_SCALES
+# workloads are <= +0.002 (tests/test_controller.py pins one).
+CONTROLLER_RECON_TOL = 0.15
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerReconciliation:
+    """Cycle model vs closed form for one (workload, technology)."""
+
+    workload: str
+    tech: str
+    analytic_seconds: float
+    controller_seconds: float
+    mode_analytic_seconds: tuple[float, ...]
+    mode_controller_seconds: tuple[float, ...]
+    config: ControllerConfig
+    tol: float = CONTROLLER_RECON_TOL
+
+    @property
+    def rel_err(self) -> float:
+        return self.controller_seconds / self.analytic_seconds - 1.0
+
+    @property
+    def ok(self) -> bool:
+        return abs(self.rel_err) <= self.tol
+
+    def as_dict(self) -> dict:
+        return {
+            "workload": self.workload,
+            "tech": self.tech,
+            "analytic_seconds": self.analytic_seconds,
+            "controller_seconds": self.controller_seconds,
+            "rel_err": self.rel_err,
+            "tol": self.tol,
+            "ok": self.ok,
+            "config": self.config.label,
+            "mode_analytic_seconds": list(self.mode_analytic_seconds),
+            "mode_controller_seconds": list(self.mode_controller_seconds),
+        }
+
+
+def reconcile_controller(
+    *,
+    scales: dict[str, float] | None = None,
+    techs: tuple[MemoryTechSpec, ...] = (E_SRAM, O_SRAM),
+    accel: AcceleratorConfig = PAPER_ACCEL,
+    rank: int = PAPER_RANK,
+    config: ControllerConfig | None = None,
+    seed: int = 0,
+    tol: float = CONTROLLER_RECON_TOL,
+) -> tuple[list[ControllerReconciliation], dict[str, ControllerRunResult]]:
+    """Replay every (workload, tech) cell through both engines.
+
+    Both sides consume the SAME exact per-input hit information — the
+    analytic side via ``exact_hit_rates_for_geometry`` injected into
+    ``hierarchy_mode_time``, the controller via its internal
+    ``simulate_trace_flags`` replay of the identical streams — so the
+    residual isolates the event loop itself, not hit-rate modeling.
+
+    Returns the per-cell reconciliations plus the raw controller runs
+    keyed ``"{workload}/{tech}"`` (for downstream band/energy checks).
+    """
+    scales = dict(EXPERIMENT_SCALES) if scales is None else scales
+    cfg = config if config is not None else calibration_controller(accel)
+    cells: list[ControllerReconciliation] = []
+    runs: dict[str, ControllerRunResult] = {}
+    for name, scale in scales.items():
+        tensor = make_frostt_like(name, scale=scale, seed=seed)
+        chars = scaled_characteristics(name, tensor, scale=scale)
+        for tech in techs:
+            hier = fpga_hierarchy(tech, accel=accel, system=PAPER_SYSTEM)
+            geometry = hier.hit_geometries()[0]
+            mode_a = []
+            for mode in range(tensor.nmodes):
+                hr = exact_hit_rates_for_geometry(tensor, mode, geometry, rank)
+                mode_a.append(
+                    hierarchy_mode_time(
+                        hier, chars, mode, rank=rank, hit_rates=hr
+                    ).seconds
+                )
+            run = simulate_controller(
+                tensor, hier, config=cfg, rank=rank, chars=chars
+            )
+            runs[f"{name}/{tech.name}"] = run
+            cells.append(
+                ControllerReconciliation(
+                    workload=name,
+                    tech=tech.name,
+                    analytic_seconds=float(sum(mode_a)),
+                    controller_seconds=run.seconds,
+                    mode_analytic_seconds=tuple(mode_a),
+                    mode_controller_seconds=tuple(
+                        r.seconds for r in run.mode_results
+                    ),
+                    config=cfg,
+                    tol=tol,
+                )
+            )
+    return cells, runs

@@ -21,6 +21,7 @@ __all__ = [
     "sweep_table_json",
     "experiments_report_md",
     "reorder_report_md",
+    "controller_report_md",
 ]
 
 
@@ -226,6 +227,8 @@ def reorder_report_md(payload: dict) -> str:
         "stack",
         "mean_hit_rate",
         "d_hit_vs_lex",
+        "bank_conflict_rate",
+        "d_conflicts_vs_lex",
         "seconds",
         "speedup_vs_lex",
         "energy_j",
@@ -241,6 +244,44 @@ def reorder_report_md(payload: dict) -> str:
         verdict = ", ".join(rec["winners"]) if rec["winners"] else "NONE"
         lines.append(f"- {name}: winning strategies: {verdict}")
     lines.append(f"- overall: {'OK' if acc['ok'] else 'FAIL'}")
+    return "\n".join(lines)
+
+
+def controller_report_md(payload: dict) -> str:
+    """Human-readable report for a ``BENCH_controller.json`` payload
+    (scripts/run_controller.py, DESIGN.md §14): the calibration
+    reconciliation cells, the paper bands under the cycle model, the
+    bank-conflicts-by-ordering table, and the policy x prefetch sweep."""
+    cfg = payload["config"]
+    lines: list[str] = []
+    lines.append(
+        f"## Cycle-level controller vs analytic hierarchy "
+        f"(tol {cfg['recon_tol']})\n"
+    )
+    recon_cols = [
+        "workload",
+        "tech",
+        "analytic_seconds",
+        "controller_seconds",
+        "rel_err",
+        "ok",
+    ]
+    lines.append(sweep_table_md(payload["reconciliation"], columns=recon_cols))
+
+    lines.append(
+        f"\n## Paper bands under the paper controller "
+        f"{cfg['paper_controller']}\n"
+    )
+    band_cols = ["workload", "scale", "speedup", "energy_savings", "in_band"]
+    lines.append(sweep_table_md(payload["paper_bands"], columns=band_cols))
+
+    lines.append("\n## Structural bank conflicts by nonzero ordering\n")
+    conflict_cols = ["ordering", "n_requests", "n_conflicts", "conflict_rate"]
+    lines.append(sweep_table_md(payload["bank_conflicts"], columns=conflict_cols))
+
+    lines.append("\n## Controller sweep (policy x prefetch, cycle-priced)\n")
+    sweep_cols = ["config", "tensor", "time_s", "energy_j", "bottlenecks"]
+    lines.append(sweep_table_md(payload["controller_sweep"], columns=sweep_cols))
     return "\n".join(lines)
 
 

@@ -39,6 +39,7 @@ from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
 from repro.data.frostt import PAPER_RANK, FrosttTensor
 from repro.dse import evaluate_sweep, tech_comparison
 from repro.experiments.measure import ExecutedTraceHitRates
+from repro.model import bank_conflict_counts, paper_controller
 from repro.reorder.strategies import ORDERINGS, prepare_execution
 
 __all__ = [
@@ -130,6 +131,14 @@ def run_reorder_sweep(
             exec_t, _ = prepare_execution(tensor, strategy)
             cache = ExecutedTraceHitRates(exec_t, "ref", ordering=strategy)
             res = evaluate_sweep(points, {ft.name: ft}, cache=cache)
+            # Structural bank conflicts of the strategy's mode-0 request
+            # stream under the paper controller (repro.model.controller,
+            # DESIGN.md §14) — a stack-independent diagnostic column, not
+            # part of the acceptance gate (the controller bench gates it
+            # on its own correlated workloads).
+            conflicts = bank_conflict_counts(
+                tensor, 0, config=paper_controller(), ordering=strategy
+            )
             per_strategy[strategy] = {}
             for tech in REORDER_STACKS:
                 cell = res.cell(tech.name, ft.name)
@@ -141,6 +150,7 @@ def run_reorder_sweep(
                     "seconds": cell.seconds,
                     "energy_j": cell.energy_j,
                     "mean_hit_rate": _mean([h for hs in hit_by_mode for h in hs]),
+                    "bank_conflict_rate": conflicts.conflict_rate,
                 }
                 per_strategy[strategy][tech.name] = rec
                 for m, mt in enumerate(cell.mode_times):
@@ -163,6 +173,9 @@ def run_reorder_sweep(
                 base = lex.get(tech.name)
                 if base is not None:
                     rec["d_hit_vs_lex"] = rec["mean_hit_rate"] - base["mean_hit_rate"]
+                    rec["d_conflicts_vs_lex"] = (
+                        rec["bank_conflict_rate"] - base["bank_conflict_rate"]
+                    )
                     rec["speedup_vs_lex"] = (
                         base["seconds"] / rec["seconds"] if rec["seconds"] else None
                     )

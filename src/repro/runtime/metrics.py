@@ -72,11 +72,22 @@ class MetricsLogger:
             raise ValueError(f"no values logged for {key!r}")
         return float(np.percentile(np.asarray(vals, dtype=np.float64), q))
 
+    #: The statistics every ``summary`` dict carries besides ``count``.
+    SUMMARY_STATS = ("mean", "min", "max", "p50", "p99")
+
     def summary(self, key: str) -> dict:
-        """Count/mean/min/max/p50/p99 of the retained ``key`` values."""
+        """Count/mean/min/max/p50/p99 of the retained ``key`` values.
+
+        The shape is total: every ``SUMMARY_STATS`` key is always
+        present.  An empty window answers ``count=0`` with ``None`` for
+        each statistic — callers indexing ``summary(k)["p99"]`` get an
+        unmistakable ``None`` (which comparisons reject loudly) instead
+        of a ``KeyError`` three frames later.  Point queries that cannot
+        answer (``percentile``) still raise ``ValueError``.
+        """
         vals = np.asarray(self.values(key), dtype=np.float64)
         if vals.size == 0:
-            return {"count": 0}
+            return {"count": 0, **{stat: None for stat in self.SUMMARY_STATS}}
         return {
             "count": int(vals.size),
             "mean": float(vals.mean()),

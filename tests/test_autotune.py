@@ -44,12 +44,22 @@ def test_tunespace_always_contains_default_first():
 
 def test_walltime_memo_counters():
     memo = WallTimeMemo()
-    key = memo.key(geometry_signature((8, 8, 8), 64, 4), 0, DEFAULT_TILE_CONFIG, "xla")
+    sig = geometry_signature((8, 8, 8), 64, 4)
+    key = memo.key(sig, 0, DEFAULT_TILE_CONFIG, "xla", 1)
     assert memo.lookup(key) is None
     assert (memo.hits, memo.misses) == (0, 1)
     memo.store(key, 0.5)
     assert memo.lookup(key) == 0.5
     assert (memo.hits, memo.misses, len(memo)) == (1, 1, 1)
+
+
+def test_walltime_memo_keys_by_reps():
+    # Regression: the memo once ignored the measurement protocol, so a
+    # reps=20 request silently got a reps=1 median back.
+    memo = WallTimeMemo()
+    sig = geometry_signature((8, 8, 8), 64, 4)
+    memo.store(memo.key(sig, 0, DEFAULT_TILE_CONFIG, "xla", 1), 0.5)
+    assert memo.lookup(memo.key(sig, 0, DEFAULT_TILE_CONFIG, "xla", 20)) is None
 
 
 def test_measure_config_positive_and_plan_cached():
@@ -69,23 +79,49 @@ def test_tune_selects_argmin_and_caches_by_band():
     assert result.best_s <= result.default_s
     assert result.speedup_vs_default >= 1.0
 
+    # Full-mode tune records its coverage.
+    assert result.modes == tuple(range(t.nmodes))
+
     # Same band -> cached result object, no new measurements.
     misses_after_first = tuner.memo.misses
     assert tuner.tune(t, 8) is result
     assert tuner.memo.misses == misses_after_first
 
-    # force=True re-runs the sweep but answers every cell from the memo.
+    # force=True re-measures: it bypasses BOTH the result cache and the
+    # wall-time memo (a forced re-tune answered from stale measurements
+    # isn't a re-tune), overwriting memo cells with fresh numbers.
     hits_before = tuner.memo.hits
+    memo_cells = len(tuner.memo)
     forced = tuner.tune(t, 8, force=True)
-    assert forced.best == result.best
-    assert tuner.memo.misses == misses_after_first
-    assert tuner.memo.hits > hits_before
+    assert forced is not result
+    assert set(forced.timings) == set(result.timings)
+    assert tuner.memo.hits == hits_before  # no memo answers on force
+    assert len(tuner.memo) == memo_cells  # same cells, re-stored
 
     # A geometrically similar tensor lands in the same band: answered from
     # the cache (the forced re-tune replaced the stored result object).
     t2 = _tensor(seed=5, nnz=410)
     assert tuner.signature_of(t2, 8) == result.signature
     assert tuner.tune(t2, 8) is forced
+
+
+def test_tune_partial_modes_never_enters_band_cache():
+    # Regression: a modes=(0,) tune used to be cached under the band key,
+    # so every later full-band config_for answered a mode-0-only argmin.
+    tuner = Autotuner(SMALL_SPACE, reps=1)
+    t = _tensor()
+    partial = tuner.tune(t, 8, modes=(0,))
+    assert partial.modes == (0,)
+    assert tuner.results == {}  # not a band answer
+    assert tuner.config_for(t, 8) == DEFAULT_TILE_CONFIG  # still untuned
+    # A subsequent full tune reuses the mode-0 measurements from the memo
+    # but measures the remaining modes and DOES enter the band cache.
+    misses_before = tuner.memo.misses
+    full = tuner.tune(t, 8)
+    assert full.modes == tuple(range(t.nmodes))
+    assert tuner.results[full.signature] is full
+    assert tuner.memo.misses > misses_before  # modes 1..n were measured
+    assert "modes" in full.to_dict()
 
 
 def test_config_for_answers_cheaply_on_miss():
@@ -141,6 +177,33 @@ def test_serve_buckets_align_to_tuned_tile():
     assert plain.nnz_pad % 384 != 0  # the alignment is not vacuous
     assert tuned.nnz_pad % 384 == 0
     assert tuned.nnz_pad >= plain.nnz_pad
+
+
+def test_measured_vs_modeled_huge_dims_density():
+    """Regression: the ad-hoc characteristics record computed its dense
+    volume with np.prod over int64, which wraps negative once the shape
+    product passes 2**63 — shapes well within FROSTT range (NELL-1-like
+    dims at 10**8-10**9 nnz).  math.prod over Python ints is exact;
+    FrosttTensor now rejects the garbage density at construction."""
+    from repro.dse.autotune import TuneResult
+
+    t = _tensor(nnz=300)
+    # Same indices, astronomically larger claimed shape: the dense volume
+    # 2**63 + 2**42 wraps negative in int64.
+    big = type(t)(
+        indices=t.indices, values=t.values, shape=(2**21, 2**21, 2**21 + 1)
+    )
+    assert np.prod([int(d) for d in big.shape]) < 0  # the overflow is real
+    result = TuneResult(
+        signature=Autotuner.signature_of(big, 8),
+        backend="xla",
+        best=DEFAULT_TILE_CONFIG,
+        timings={DEFAULT_TILE_CONFIG: 1e-3},
+        modes=(0, 1, 2),
+    )
+    rows = measured_vs_modeled(big, result, rank=8, name="huge")
+    assert len(rows) == 1
+    assert np.isfinite(rows[0]["modeled_s"]) and rows[0]["modeled_s"] > 0.0
 
 
 def test_measured_vs_modeled_rows():

@@ -1,0 +1,327 @@
+"""Cycle-level memory-controller simulator (repro.model.controller, §14).
+
+The anchor tests are cross-validations against the analytic hierarchy:
+a single-bank fifo controller whose reorder buffer covers the whole
+stream must reproduce a 1-unit analytic stack's cycles EXACTLY (the event
+loop degenerates to Eq-1's max-of-bounds), and the Eq-1-consistent
+calibration configuration must reconcile within ``CONTROLLER_RECON_TOL``
+on experiment-scale workloads.  The rest are structural properties the
+event loop must satisfy regardless of workload: policy ordering, bank
+monotonicity, prefetch accounting, conflict counting.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import PAPER_ACCEL
+from repro.core.cache_sim import CacheConfig, simulate_trace, simulate_trace_flags
+from repro.core.hierarchy import fpga_hierarchy, hierarchy_mode_time
+from repro.core.memory_tech import E_SRAM, O_SRAM, PAPER_SYSTEM
+from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
+from repro.data.frostt import PAPER_RANK
+from repro.data.synthetic_tensors import make_frostt_like, scaled_characteristics
+from repro.dse.evaluator import exact_hit_rates_for_geometry
+from repro.experiments import CONTROLLER_RECON_TOL, reconcile_controller
+from repro.model import (
+    POLICIES,
+    ControllerConfig,
+    bank_conflict_counts,
+    calibration_controller,
+    paper_controller,
+    request_streams,
+    simulate_controller,
+    simulate_controller_mode,
+)
+
+RANK = 16
+
+
+def _tensor(seed=0, nnz=400, shape=(37, 29, 23), **kw):
+    return random_sparse_tensor(shape, nnz=nnz, seed=seed, **kw)
+
+
+def _hier(tech=E_SRAM):
+    return fpga_hierarchy(tech, accel=PAPER_ACCEL, system=PAPER_SYSTEM)
+
+
+# --- config validation ------------------------------------------------------
+
+
+def test_controller_config_validation():
+    with pytest.raises(ValueError, match="n_banks"):
+        ControllerConfig(n_banks=0)
+    with pytest.raises(ValueError, match="bank_conflict_policy"):
+        ControllerConfig(bank_conflict_policy="roundrobin")
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        ControllerConfig(prefetch_depth=-1)
+    with pytest.raises(ValueError, match="reorder_buffer_depth"):
+        ControllerConfig(reorder_buffer_depth=0)
+    cfg = ControllerConfig(n_banks=4, reorder_buffer_depth=8)
+    assert cfg.window_requests == 32
+    assert "banks=4" in cfg.label
+
+
+def test_paper_and_calibration_controllers():
+    # One bank per cache unit of the Table-I accelerator, fifo, no
+    # prefetch — the Eq-1-consistent service discipline.
+    for cfg in (paper_controller(), calibration_controller()):
+        assert cfg.n_banks == PAPER_ACCEL.n_pe * PAPER_ACCEL.n_caches
+        assert cfg.bank_conflict_policy == "fifo"
+        assert cfg.prefetch_depth == 0
+
+
+def test_controller_rejects_non_fpga_and_wide_rows():
+    from repro.core.memory_tech import TPU_V5E
+    from repro.core.hierarchy import resolve_hierarchy
+
+    t = _tensor()
+    tpu = resolve_hierarchy(TPU_V5E, accel=PAPER_ACCEL, system=PAPER_SYSTEM)
+    with pytest.raises(ValueError, match="fpga-family"):
+        simulate_controller_mode(
+            t, 0, tpu, config=ControllerConfig(), rank=RANK
+        )
+    # A factor row must fit one controller line (row-granular requests).
+    with pytest.raises(ValueError, match="line_bytes"):
+        simulate_controller_mode(
+            t, 0, _hier(), config=ControllerConfig(line_bytes=32), rank=RANK
+        )
+
+
+# --- per-access flag simulator (core.cache_sim) -----------------------------
+
+
+def test_trace_flags_agree_with_simulate_trace_exactly():
+    # Same LRU, per-access resolution: aggregate counts must be integer
+    # equal, on random and on skewed correlated traces.
+    cfg = CacheConfig(num_lines=64, line_bytes=64, associativity=4)
+    rng = np.random.default_rng(0)
+    for trace in (
+        rng.integers(0, 500, size=4000),
+        np.abs(rng.standard_cauchy(4000) * 20).astype(np.int64) % 300,
+        np.arange(2000) % 97,
+    ):
+        flags = simulate_trace_flags(trace, cfg, row_bytes=64)
+        stats = simulate_trace(trace, cfg, row_bytes=64)
+        assert int(flags.hits.sum()) == stats.hits
+        assert flags.stats == stats
+        assert flags.prefetch_fills.sum() == 0
+
+
+def test_trace_flags_rejects_multi_line_rows():
+    cfg = CacheConfig(num_lines=64, line_bytes=64, associativity=4)
+    with pytest.raises(ValueError, match="single-line"):
+        simulate_trace_flags(np.arange(10), cfg, row_bytes=128)
+
+
+def test_trace_flags_prefetch_converts_sequential_misses():
+    # A strictly sequential scan: depth-D prefetch turns D of every D+1
+    # cold misses into hits, and fills never exceed the catalog.
+    cfg = CacheConfig(num_lines=256, line_bytes=64, associativity=4)
+    trace = np.arange(200, dtype=np.int64)
+    cold = simulate_trace_flags(trace, cfg, row_bytes=64, prefetch_depth=0)
+    assert cold.hits.sum() == 0
+    pf = simulate_trace_flags(
+        trace, cfg, row_bytes=64, prefetch_depth=3, catalog_rows=200
+    )
+    assert pf.hits.sum() == 150  # 3 of every 4 rows prefetched
+    assert pf.prefetch_fills.sum() == 150  # every hit was bought by a fill
+    # Catalog bound: the last row's prefetches are clipped.
+    short = simulate_trace_flags(
+        np.array([197, 198, 199]), cfg, row_bytes=64, prefetch_depth=5,
+        catalog_rows=200,
+    )
+    assert short.prefetch_fills[0] == 2  # rows 198, 199 only
+
+
+# --- exact match against the analytic engine --------------------------------
+
+
+def test_single_bank_fifo_one_window_matches_analytic_exactly():
+    """The tentpole cross-validation: one fifo bank, a reorder buffer
+    covering the whole stream, prefetch 0 — the event loop IS the
+    analytic max-of-bounds of a 1-unit stack, bit for bit."""
+    t = _tensor(seed=3)
+    cfg = ControllerConfig(
+        n_banks=1, bank_conflict_policy="fifo", prefetch_depth=0,
+        reorder_buffer_depth=4096,
+    )
+    for tech in (E_SRAM, O_SRAM):
+        hier = _hier(tech)
+        lvl = hier.caching_levels()[0]
+        hier1 = hier.replace_level(
+            lvl.name,
+            port_model=dataclasses.replace(lvl.port_model, n_units=1),
+        )
+        geometry = hier.hit_geometries()[0]
+        for mode in range(t.nmodes):
+            r = simulate_controller_mode(t, mode, hier, config=cfg, rank=RANK)
+            assert r.n_windows == 1
+            hr = exact_hit_rates_for_geometry(t, mode, geometry, RANK)
+            from repro.model.controller import _adhoc_chars
+
+            mt = hierarchy_mode_time(
+                hier1, _adhoc_chars(t, "x"), mode, rank=RANK, hit_rates=hr
+            )
+            assert r.seconds == pytest.approx(mt.seconds, rel=1e-9)
+            # The hit accounting is integer-exact, not just rate-close.
+            assert r.hit_rates == pytest.approx(hr, abs=0)
+
+
+def test_calibration_reconciles_with_analytic_hierarchy():
+    """The gate the bench artifact enforces on all EXPERIMENT_SCALES
+    workloads, here on one scaled tensor as a fast smoke: the fifo
+    calibration config lands within CONTROLLER_RECON_TOL of the analytic
+    hierarchy, and the residual is one-sided (sum of window maxima can
+    only exceed the closed form's max of sums)."""
+    cells, runs = reconcile_controller(scales={"NELL-2": 1e-4})
+    assert {c.tech for c in cells} == {"E-SRAM", "O-SRAM"}
+    for c in cells:
+        assert c.ok, f"{c.workload}/{c.tech}: rel={c.rel_err:+.4f}"
+        assert c.rel_err >= -1e-9  # one-sided
+        assert abs(c.rel_err) <= CONTROLLER_RECON_TOL
+        run = runs[f"{c.workload}/{c.tech}"]
+        assert run.seconds == pytest.approx(c.controller_seconds)
+        assert run.energy_j is not None and run.energy_j > 0
+
+
+# --- structural properties --------------------------------------------------
+
+
+def test_policy_ordering_fifo_queue_stall():
+    """fifo <= queue <= stall cycles: shared-queue work conservation can
+    only beat independent per-bank drain, which can only beat
+    head-of-line blocking.  Forced into the bank-bound regime with a
+    conflict-heavy correlated tensor and few banks."""
+    t = _tensor(
+        seed=7, nnz=3000, shape=(64, 4096, 4096),
+        zipf_a=1.2, correlation=0.9, n_clusters=16, shuffle=True,
+    )
+    hier = _hier()
+    cycles = {}
+    for pol in POLICIES:
+        cfg = ControllerConfig(
+            n_banks=2, bank_conflict_policy=pol, reorder_buffer_depth=4
+        )
+        cycles[pol] = simulate_controller_mode(
+            t, 0, hier, config=cfg, rank=RANK
+        ).cycles
+    assert cycles["fifo"] <= cycles["queue"] * (1 + 1e-12)
+    assert cycles["queue"] <= cycles["stall"] * (1 + 1e-12)
+    # And the discipline actually separates them on this workload.
+    assert cycles["fifo"] < cycles["stall"]
+
+
+def test_more_banks_never_slower_on_conflict_free_trace():
+    """On a round-robin (conflict-free under every bank count that
+    divides the period) stream, adding banks never increases cycles —
+    banking only adds service capacity when there are no conflicts."""
+    period = 24  # divisible by 1, 2, 4, 6, 12, 24
+    nnz = 1200
+    idx = np.stack(
+        [np.arange(nnz) % period, np.arange(nnz) % period, np.arange(nnz) % period],
+        axis=1,
+    ).astype(np.int32)
+    t = SparseTensor(
+        indices=idx, values=np.ones(nnz, dtype=np.float32), shape=(period,) * 3
+    )
+    hier = _hier()
+    prev = None
+    for n_banks in (1, 2, 4, 6, 12, 24):
+        cfg = ControllerConfig(
+            n_banks=n_banks, bank_conflict_policy="stall",
+            reorder_buffer_depth=64,
+        )
+        c = simulate_controller_mode(t, 0, hier, config=cfg, rank=RANK).cycles
+        if prev is not None:
+            assert c <= prev * (1 + 1e-12), (n_banks, c, prev)
+        prev = c
+
+
+def test_orderings_reduce_bank_conflicts_on_correlated_tensor():
+    """Degree and blocked orderings cluster same-row nonzeros, so they
+    beat lexicographic order on structural bank conflicts — on tensors
+    with correlated index structure (the regime reordering targets)."""
+    t = _tensor(
+        seed=7, nnz=20_000, shape=(2048, 32768, 32768),
+        zipf_a=1.1, correlation=0.9, n_clusters=64, shuffle=True,
+    )
+    cfg = paper_controller()
+    lex = bank_conflict_counts(t, 0, config=cfg, ordering="lex")
+    assert lex.n_requests == 2 * t.nnz
+    for ordering in ("degree", "blocked"):
+        alt = bank_conflict_counts(t, 0, config=cfg, ordering=ordering)
+        assert alt.n_requests == lex.n_requests
+        assert alt.n_conflicts < lex.n_conflicts, (
+            f"{ordering}: {alt.conflict_rate:.4f} !< {lex.conflict_rate:.4f}"
+        )
+
+
+def test_prefetch_buys_hits_and_charges_dram():
+    """Prefetch accounting is conservative: every fill is charged as
+    line_bytes of DRAM traffic, hits never decrease, and depth 0 changes
+    nothing."""
+    t = make_frostt_like("NELL-2", scale=1e-4, seed=0)
+    hier = _hier(O_SRAM)
+    base = simulate_controller_mode(
+        t, 0, hier, config=ControllerConfig(prefetch_depth=0), rank=RANK
+    )
+    assert base.n_prefetch_fills == 0
+    prev_hits = base.n_hits
+    for depth in (1, 2, 4):
+        r = simulate_controller_mode(
+            t, 0, hier, config=ControllerConfig(prefetch_depth=depth), rank=RANK
+        )
+        assert r.n_hits >= prev_hits
+        assert r.n_prefetch_fills > 0
+        assert r.dram_bytes > base.dram_bytes  # fills are paid for
+        prev_hits = r.n_hits
+
+
+def test_request_streams_match_mode_ordered_indices():
+    t = _tensor()
+    streams = request_streams(t, 1)
+    assert [k for k, _ in streams] == [0, 2]
+    ordered = t.mode_sorted(1)
+    for k, rows in streams:
+        np.testing.assert_array_equal(rows, ordered.indices[:, k])
+
+
+def test_simulate_controller_full_run_shape():
+    t = _tensor()
+    run = simulate_controller(t, _hier(), config=paper_controller(), rank=RANK)
+    assert len(run.mode_results) == t.nmodes
+    assert run.seconds == pytest.approx(sum(r.seconds for r in run.mode_results))
+    assert run.energy_j is not None and run.energy_j > 0
+    assert set(run.energy_breakdown) >= {"compute", "dram", "sram"}
+    for r in run.mode_results:
+        assert r.bottleneck in ("compute", "issue", "bank", "dram")
+        mt = r.as_mode_time()
+        assert mt.seconds == r.seconds
+        assert mt.dram_bytes == r.dram_bytes
+
+
+def test_controller_sweep_axes_price_through_event_loop():
+    """Naming a controller axis switches the point to cycle-level pricing
+    and refuses to run without executable traces."""
+    from repro.dse import SweepSpec, evaluate_sweep
+
+    from repro.model.controller import _adhoc_chars
+
+    t = _tensor(nnz=600)
+    chars = _adhoc_chars(t, "unit")
+    spec = SweepSpec(axes={"n_banks": (1, 12), "prefetch_depth": (0, 2)})
+    pts = spec.points()
+    assert all(p.controller is not None for p in pts)
+    assert {p.controller.n_banks for p in pts} == {1, 12}
+    with pytest.raises(ValueError, match="executable trace"):
+        evaluate_sweep(pts, {"unit": chars})
+    res = evaluate_sweep(
+        pts, {"unit": chars}, hit_rate_method="trace", trace_tensors={"unit": t}
+    )
+    assert len(res.results) == len(pts)
+    for r in res.results:
+        assert r.seconds > 0 and r.energy_j > 0
+    with pytest.raises(ValueError, match="bank policies"):
+        SweepSpec(axes={"bank_policy": ("fifo", "bogus")})

@@ -267,8 +267,24 @@ def test_metrics_logger_empty_and_heterogeneous_keys():
     log = MetricsLogger("t", quiet=True)
     with pytest.raises(ValueError, match="no values"):
         log.percentile("missing", 50)
-    assert log.summary("missing") == {"count": 0}
     log.log(0, a=1.0)
     log.log(1, b=2.0)  # rows need not share keys
     assert log.values("a") == [1.0]
     assert log.summary("b")["count"] == 1
+
+
+def test_metrics_logger_empty_summary_shape_is_total():
+    # The summary contract: the dict shape never depends on the window.
+    # An empty window used to answer a bare {"count": 0}, so a caller
+    # indexing summary(k)["p99"] crashed with KeyError only on the empty
+    # path — the worst kind of branch to discover in a serving loop.
+    log = MetricsLogger("t", quiet=True)
+    empty = log.summary("missing")
+    assert empty["count"] == 0
+    assert set(empty) == {"count", *MetricsLogger.SUMMARY_STATS}
+    assert all(empty[stat] is None for stat in MetricsLogger.SUMMARY_STATS)
+    # Populated windows share the same keys.
+    log.log(0, missing=3.0)
+    full = log.summary("missing")
+    assert set(full) == set(empty)
+    assert full["count"] == 1 and full["p99"] == 3.0
