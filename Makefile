@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke controller controller-smoke
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke controller controller-smoke analyze analyze-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -71,4 +71,28 @@ controller-smoke:
 docs-check:
 	$(PY) scripts/docs_check.py
 
-check: docs-check test
+# Repo-specific static analysis (repro.analysis, DESIGN.md §15): Pallas
+# write-only contract, trace safety, memo-key completeness, kwarg
+# threading, shared-state ownership, citation integrity.  Fails on any
+# finding that is neither suppressed in place nor in the baseline, and
+# refreshes the committed BENCH_analysis.json report.
+analyze:
+	$(PY) scripts/run_analysis.py --baseline analysis_baseline.json \
+		--json BENCH_analysis.json
+
+# CI smoke: gate only, no report refresh.
+analyze-smoke:
+	$(PY) scripts/run_analysis.py --baseline analysis_baseline.json -q
+
+# Generic lint/typing (ruff + mypy, configured in pyproject.toml).
+# Both tools come from requirements-dev.txt; skip gracefully where they
+# are not installed so `make lint` never fails on a runtime-only box.
+lint:
+	@$(PY) -c "import ruff" 2>/dev/null \
+		&& $(PY) -m ruff check src scripts benchmarks examples tests \
+		|| echo "lint: ruff not installed, skipping (pip install -r requirements-dev.txt)"
+	@$(PY) -c "import mypy" 2>/dev/null \
+		&& $(PY) -m mypy src/repro/core src/repro/dse \
+		|| echo "lint: mypy not installed, skipping (pip install -r requirements-dev.txt)"
+
+check: docs-check analyze lint test

@@ -9,7 +9,6 @@ performance-model verdict for the same computation on the O-SRAM vs
 E-SRAM FPGA.
 """
 
-import numpy as np
 
 from repro.core.cp_als import cp_als
 from repro.core.sparse_tensor import random_sparse_tensor

@@ -1,50 +1,38 @@
 #!/usr/bin/env python
 """Fail if any ``DESIGN.md §N`` citation lacks a matching DESIGN.md heading.
 
-Scans src/, tests/, benchmarks/ and examples/ for citations of the form
-``DESIGN.md §<number>`` and checks each cited section number appears in a
-markdown heading of DESIGN.md (e.g. ``## §7 — Cache modeling``).  Run via
-``make docs-check``.
+Thin wrapper kept for ``make docs-check`` compatibility: the check
+itself lives in the ``docs-citation`` checker of ``repro.analysis``
+(DESIGN.md §15), where it also runs under ``make analyze`` with
+per-citation file:line findings.  This wrapper adds ``tests/`` to the
+scan set (the analysis gate scans source dirs only) and keeps the old
+exit semantics: nonzero iff any citation does not resolve.
 """
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
-CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
-HEADING_RE = re.compile(r"^#{1,4}\s*§(\d+)\b", re.MULTILINE)
+sys.path.insert(0, str(ROOT / "src"))
+
+SCAN_DIRS = ("src", "scripts", "tests", "benchmarks", "examples")
 
 
 def main() -> int:
-    design = ROOT / "DESIGN.md"
-    if not design.exists():
-        print("docs-check: DESIGN.md is missing", file=sys.stderr)
-        return 1
-    headings = set(HEADING_RE.findall(design.read_text()))
+    from repro.analysis import run_analysis
 
-    citations: dict[str, list[str]] = {}
-    for d in SCAN_DIRS:
-        for path in sorted((ROOT / d).rglob("*.py")):
-            for sec in CITE_RE.findall(path.read_text()):
-                citations.setdefault(sec, []).append(str(path.relative_to(ROOT)))
-
-    missing = {s: files for s, files in citations.items() if s not in headings}
-    if missing:
-        for sec, files in sorted(missing.items()):
-            print(
-                f"docs-check: DESIGN.md §{sec} cited but no heading found "
-                f"(cited in: {', '.join(sorted(set(files)))})",
-                file=sys.stderr,
-            )
+    report = run_analysis(ROOT, checks=["docs-citation"], dirs=SCAN_DIRS)
+    for f in report.active:
+        print(f"docs-check: {f.location}: {f.message}", file=sys.stderr)
+    if report.active:
         return 1
-    n_cites = sum(len(f) for f in citations.values())
+    facts = report.facts.get("docs-citation", {})
+    cited = facts.get("sections_cited", [])
     print(
-        f"docs-check: OK — {n_cites} citations across {len(citations)} sections "
-        f"({', '.join('§' + s for s in sorted(citations, key=int))}), all resolve"
+        f"docs-check: OK — {facts.get('citations', 0)} citations across "
+        f"{len(cited)} sections ({', '.join('§' + s for s in cited)}), all resolve"
     )
     return 0
 

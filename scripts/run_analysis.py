@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""Run the repro.analysis checkers and gate CI on the result.
+
+Usage:
+    python scripts/run_analysis.py                      # human summary, gate
+    python scripts/run_analysis.py --json out.json      # + machine report
+    python scripts/run_analysis.py --checks trace-safety,memo-key-completeness
+    python scripts/run_analysis.py --write-baseline analysis_baseline.json
+    python scripts/run_analysis.py --baseline analysis_baseline.json
+
+Exit status (the CI contract, DESIGN.md §15):
+  0  no active findings, or every active finding's fingerprint is in the
+     baseline (known, reviewed, not yet fixed);
+  1  at least one NEW active finding — fix it or suppress it in place
+     with ``# repro: ignore[check-id]  # reason``.
+
+Suppressed findings never fail the gate; they are listed so reviewers
+see what has been waived.  Baseline fingerprints are line-independent
+(check id, path, message), so unrelated edits do not churn the file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import run_analysis  # noqa: E402
+from repro.analysis.core import DEFAULT_SCAN_DIRS  # noqa: E402
+
+
+def _load_baseline(path: Path) -> set[tuple[str, str, str]]:
+    data = json.loads(path.read_text())
+    return {tuple(fp) for fp in data.get("fingerprints", [])}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=REPO)
+    ap.add_argument("--checks", help="comma-separated check ids (default: all)")
+    ap.add_argument(
+        "--dirs", help=f"comma-separated scan dirs (default: {','.join(DEFAULT_SCAN_DIRS)})"
+    )
+    ap.add_argument("--json", type=Path, help="write the JSON report here")
+    ap.add_argument("--baseline", type=Path, help="known-findings baseline to compare")
+    ap.add_argument(
+        "--write-baseline", type=Path,
+        help="record current active findings as the new baseline and exit 0",
+    )
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    report = run_analysis(
+        args.root,
+        checks=args.checks.split(",") if args.checks else None,
+        dirs=tuple(args.dirs.split(",")) if args.dirs else DEFAULT_SCAN_DIRS,
+    )
+
+    if args.json:
+        args.json.write_text(report.to_json() + "\n")
+
+    if args.write_baseline:
+        args.write_baseline.write_text(
+            json.dumps(
+                {
+                    "schema": "repro.analysis.baseline/v1",
+                    "fingerprints": sorted(f.fingerprint for f in report.active),
+                },
+                indent=2,
+            )
+            + "\n"
+        )
+        print(f"baseline: {len(report.active)} fingerprint(s) -> {args.write_baseline}")
+        return 0
+
+    known = _load_baseline(args.baseline) if args.baseline and args.baseline.exists() else set()
+    new = [f for f in report.active if f.fingerprint not in known]
+    stale = known - {f.fingerprint for f in report.active}
+
+    if not args.quiet:
+        print(f"repro.analysis: {report.files_scanned} files, "
+              f"{len(report.checkers)} checkers")
+        for row in report.checkers:
+            print(f"  {row['id']:<24} active={row['findings']:<3} "
+                  f"suppressed={row['suppressed']}")
+        for f in report.suppressed:
+            print(f"  WAIVED {f.location} [{f.check_id}] {f.message}")
+        for f in report.active:
+            tag = "KNOWN " if f.fingerprint in known else "NEW   "
+            print(f"  {tag} {f.location} [{f.check_id}] {f.message}")
+        for fp in sorted(stale):
+            print(f"  STALE baseline entry (fixed — prune it): {list(fp)}")
+
+    if new:
+        print(f"FAIL: {len(new)} new finding(s)", file=sys.stderr)
+        return 1
+    print(f"OK: 0 new findings ({len(report.active)} known, "
+          f"{len(report.suppressed)} suppressed)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

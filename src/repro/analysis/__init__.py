@@ -1,0 +1,31 @@
+"""repro.analysis — repo-specific static analysis (DESIGN.md §15).
+
+An AST-based checker framework encoding the contracts the test suite
+cannot see from the outside: Pallas out_ref write-only discipline,
+trace safety inside jit/scan/vmap bodies, memo-key completeness,
+scheduling-knob threading through dispatch wrappers, shared-state
+ownership in the serving/DSE layers, and DESIGN.md citation integrity.
+
+Entry points: ``scripts/run_analysis.py`` (CLI, CI gate) or
+
+    from repro.analysis import run_analysis
+    report = run_analysis(Path("."))
+"""
+
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    Report,
+    default_checkers,
+    register,
+    run_analysis,
+)
+
+__all__ = [
+    "Checker",
+    "Finding",
+    "Report",
+    "default_checkers",
+    "register",
+    "run_analysis",
+]

@@ -1,0 +1,16 @@
+"""Checker catalog — importing this package populates the registry.
+
+Each module defines one checker and registers it via
+:func:`repro.analysis.core.register`.  ``default_checkers()`` imports
+this package, so adding a checker is: write the module, import it here,
+add fixtures under ``tests/analysis_fixtures/`` (DESIGN.md §15).
+"""
+
+from repro.analysis.checkers import (  # noqa: F401
+    docs_citation,
+    kwarg_threading,
+    memo_keys,
+    pallas_contract,
+    shared_state,
+    trace_safety,
+)

@@ -1,0 +1,56 @@
+"""docs-citation: every ``DESIGN.md §N`` citation must resolve to a heading.
+
+The former standalone ``scripts/docs_check.py`` folded into the checker
+framework (DESIGN.md §15): same regexes, but findings now carry the
+citing file and line (the script only reported the section), the JSON
+report records the citation census, and the check runs in the same gate
+and baseline machinery as every other contract.  The script remains as
+a thin wrapper for ``make docs-check`` compatibility.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.analysis.core import AnalysisContext, Checker, register
+
+CITE_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADING_RE = re.compile(r"^#{1,4}\s*§(\d+)\b", re.MULTILINE)
+
+#: Checker-fixture snippets cite fake sections on purpose.
+EXCLUDED_PATH_PARTS = ("analysis_fixtures",)
+
+
+@register
+class DocsCitation(Checker):
+    check_id = "docs-citation"
+    description = (
+        "Every `DESIGN.md §N` citation in source resolves to a DESIGN.md "
+        "heading"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        design = ctx.root / "DESIGN.md"
+        headings: set[str] = set()
+        if design.exists():
+            headings = set(HEADING_RE.findall(design.read_text()))
+
+        citations: dict[str, int] = {}
+        for sf in ctx.files:
+            if any(part in sf.path for part in EXCLUDED_PATH_PARTS):
+                continue
+            for lineno, line in enumerate(sf.lines, start=1):
+                for sec in CITE_RE.findall(line):
+                    citations[sec] = citations.get(sec, 0) + 1
+                    if sec not in headings:
+                        self.emit(
+                            sf, lineno,
+                            f"DESIGN.md §{sec} cited but DESIGN.md has no "
+                            f"matching heading (known: "
+                            f"{', '.join('§' + h for h in sorted(headings, key=int))})",
+                        )
+        self.facts = {
+            "citations": sum(citations.values()),
+            "sections_cited": sorted(citations, key=int),
+            "sections_defined": sorted(headings, key=int),
+        }

@@ -1,0 +1,259 @@
+"""memo-key-completeness: cache keys must cover every key-relevant field.
+
+Three concrete bugs motivated this checker (CHANGES.md PRs 4/8): the
+autotuner's ``WallTimeMemo.key`` omitting ``reps`` (a reps=3 median
+answered reps=20 requests), partial-mode tunes entering the band cache,
+and the historical fear codified by ``CacheGeometry``'s import-time
+``KEY_FIELDS`` assert — a geometry field missing from the memo key
+silently aliases ``HitRateCache`` entries.  The import-time assert only
+protects the one class that carries it; this pass generalizes it
+repo-wide (DESIGN.md §15):
+
+  1. **KEY_FIELDS completeness** — any dataclass declaring a
+     ``KEY_FIELDS`` tuple must list every dataclass field in it.
+  2. **key-builder completeness** — any function/staticmethod named
+     ``key`` (or ``*_key``) that returns a tuple must mention every
+     parameter in the returned expression; a parameter accepted but not
+     hashed is exactly the ``reps`` bug.
+  3. **get/put key symmetry** — at every ``IdentityKeyedCache`` call
+     site, the set of key expressions passed to ``.get(anchor, key)``
+     must equal the set passed to ``.put(anchor, key, value)``; a memo
+     that stores under a different key than it looks up never hits (or
+     aliases two logical entries).
+  4. **hash-complete key dataclasses** — frozen dataclasses whose name
+     marks them as keys (``*Signature``, ``*Geometry``, ``*Config``,
+     ``*Key``) must not exclude fields from equality/hash
+     (``field(compare=False)`` / ``hash=False``); an excluded field is
+     invisible to every dict keyed on the class.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    AnalysisContext,
+    Checker,
+    SourceFile,
+    call_name,
+    names_in,
+    register,
+)
+
+KEY_CLASS_RE = ("Signature", "Geometry", "Config", "Key")
+
+
+def _is_dataclass(cls: ast.ClassDef) -> tuple[bool, bool]:
+    """(is_dataclass, frozen)"""
+    for dec in cls.decorator_list:
+        name = call_name(dec) if isinstance(dec, ast.Call) else None
+        if name is None and isinstance(dec, (ast.Name, ast.Attribute)):
+            from repro.analysis.core import dotted_name
+
+            name = dotted_name(dec)
+        if name and name.rsplit(".", 1)[-1] == "dataclass":
+            frozen = False
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                        frozen = bool(kw.value.value)
+            return True, frozen
+    return False, False
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> list[ast.AnnAssign]:
+    """Annotated class-level assignments = dataclass fields (ClassVar and
+    plain ``NAME = ...`` class attributes like KEY_FIELDS are not fields)."""
+    out = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            ann = ast.unparse(node.annotation)
+            if "ClassVar" in ann:
+                continue
+            out.append(node)
+    return out
+
+
+@register
+class MemoKeyCompleteness(Checker):
+    check_id = "memo-key-completeness"
+    description = (
+        "Cache-key dataclasses hash over all fields (KEY_FIELDS complete, "
+        "no compare=False), key() builders use every parameter, and "
+        "IdentityKeyedCache get/put key expressions match"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        audited_classes: list[str] = []
+        audited_builders: list[str] = []
+        audited_caches: list[str] = []
+        for sf in ctx.under("src/"):
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.ClassDef):
+                    self._check_class(sf, node, audited_classes)
+                elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if node.name == "key" or node.name.endswith("_key"):
+                        if self._check_key_builder(sf, node):
+                            audited_builders.append(f"{sf.module}.{node.name}")
+            audited_caches.extend(self._check_identity_caches(sf))
+        self.facts = {
+            "key_classes": audited_classes,
+            "key_builders": audited_builders,
+            "identity_caches": audited_caches,
+        }
+
+    # -- rules 1 and 4 -------------------------------------------------------
+
+    def _check_class(
+        self, sf: SourceFile, cls: ast.ClassDef, audited: list[str]
+    ) -> None:
+        is_dc, frozen = _is_dataclass(cls)
+        if not is_dc:
+            return
+        fields = _dataclass_fields(cls)
+        field_names = [f.target.id for f in fields]  # type: ignore[union-attr]
+
+        key_fields_node = None
+        for node in cls.body:
+            if (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "KEY_FIELDS"
+            ):
+                key_fields_node = node
+        if key_fields_node is not None:
+            audited.append(f"{sf.module}.{cls.name}")
+            declared: set[str] = set()
+            if isinstance(key_fields_node.value, (ast.Tuple, ast.List)):
+                declared = {
+                    e.value
+                    for e in key_fields_node.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                }
+            missing = [f for f in field_names if f not in declared]
+            for f in missing:
+                self.emit(
+                    sf, key_fields_node,
+                    f"{cls.name}.KEY_FIELDS omits field {f!r}; a key-relevant "
+                    "field missing from the memo key silently aliases cache "
+                    "entries (DESIGN.md §8 step 3)",
+                )
+            stale = sorted(declared - set(field_names))
+            for f in stale:
+                self.emit(
+                    sf, key_fields_node,
+                    f"{cls.name}.KEY_FIELDS names {f!r} which is not a "
+                    "dataclass field (stale key declaration)",
+                )
+
+        if frozen and (
+            key_fields_node is not None
+            or any(cls.name.endswith(s) for s in KEY_CLASS_RE)
+        ):
+            if key_fields_node is None:
+                audited.append(f"{sf.module}.{cls.name}")
+            for f in fields:
+                if not isinstance(f.value, ast.Call):
+                    continue
+                if (call_name(f.value) or "").rsplit(".", 1)[-1] != "field":
+                    continue
+                for kw in f.value.keywords:
+                    if kw.arg in ("compare", "hash") and isinstance(
+                        kw.value, ast.Constant
+                    ) and kw.value.value is False:
+                        self.emit(
+                            sf, f,
+                            f"{cls.name}.{f.target.id} sets {kw.arg}=False; "  # type: ignore[union-attr]
+                            "a key dataclass excluded field is invisible to "
+                            "every dict/memo keyed on the class",
+                        )
+
+    # -- rule 2 --------------------------------------------------------------
+
+    def _check_key_builder(self, sf: SourceFile, fn: ast.FunctionDef) -> bool:
+        params = [
+            a.arg
+            for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+            if a.arg not in ("self", "cls")
+        ]
+        returns = [
+            n for n in ast.walk(fn)
+            if isinstance(n, ast.Return) and n.value is not None
+        ]
+        # Only audit tuple-building keys: a ``key()`` computing something
+        # else (or with no parameters) has nothing to omit.
+        tuple_returns = [
+            r for r in returns
+            if isinstance(r.value, ast.Tuple)
+            or (isinstance(r.value, ast.Call)
+                and (call_name(r.value) or "") == "tuple")
+            or (isinstance(r.value, ast.BinOp)
+                and isinstance(r.value.op, ast.Add))
+        ]
+        if not params or not tuple_returns:
+            return False
+        used: set[str] = set()
+        for r in tuple_returns:
+            used |= names_in(r.value)
+        for p in params:
+            if p not in used:
+                self.emit(
+                    sf, fn,
+                    f"key builder {fn.name!r} accepts parameter {p!r} but the "
+                    "returned key never uses it — two calls differing only in "
+                    f"{p!r} share a memo entry (the WallTimeMemo 'reps' bug)",
+                )
+        return True
+
+    # -- rule 3 --------------------------------------------------------------
+
+    def _check_identity_caches(self, sf: SourceFile) -> list[str]:
+        """get/put key-expression symmetry per IdentityKeyedCache binding."""
+        cache_names: set[str] = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                ctor = (call_name(node.value) or "").rsplit(".", 1)[-1]
+                if ctor == "IdentityKeyedCache":
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            cache_names.add(t.id)
+                        elif isinstance(t, ast.Attribute):
+                            cache_names.add(t.attr)
+        if not cache_names:
+            return []
+
+        gets: dict[str, dict[str, ast.Call]] = {n: {} for n in cache_names}
+        puts: dict[str, dict[str, ast.Call]] = {n: {} for n in cache_names}
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("get", "put")
+                    and len(node.args) >= 2):
+                continue
+            base = node.func.value
+            base_name = base.id if isinstance(base, ast.Name) else (
+                base.attr if isinstance(base, ast.Attribute) else None
+            )
+            if base_name not in cache_names:
+                continue
+            key_repr = ast.unparse(node.args[1])
+            (gets if node.func.attr == "get" else puts)[base_name][key_repr] = node
+        for name in sorted(cache_names):
+            for key_repr, call in sorted(puts[name].items()):
+                if gets[name] and key_repr not in gets[name]:
+                    self.emit(
+                        sf, call,
+                        f"cache {name!r}: .put() keys on {key_repr} but no "
+                        f".get() uses that expression (lookups use "
+                        f"{sorted(gets[name])}); asymmetric keys never hit",
+                    )
+            for key_repr, call in sorted(gets[name].items()):
+                if puts[name] and key_repr not in puts[name]:
+                    self.emit(
+                        sf, call,
+                        f"cache {name!r}: .get() keys on {key_repr} but no "
+                        f".put() stores under it (stores use "
+                        f"{sorted(puts[name])}); asymmetric keys never hit",
+                    )
+        return [f"{sf.module}.{n}" for n in sorted(cache_names)]

@@ -1,0 +1,284 @@
+"""pallas-kernel-contract: the Mosaic-facing invariants of Pallas kernels.
+
+The streaming-accumulation restructure (DESIGN.md §13) rests on three
+properties of every Pallas kernel body that are *statically visible* in
+the kernel source but were previously only argued in comments — and the
+write-only one is unverifiable at runtime on this container because the
+Mosaic lowering needs a real TPU (ROADMAP "real-TPU validation"):
+
+  1. **out_ref write-only, stored exactly once** — each output ref is
+     the target of exactly one subscript store per kernel body (the
+     block flush), is never read, and is never read-modify-written
+     (``+=``).  Reading ``.shape``/``.dtype``/``.ndim`` metadata is
+     allowed — shapes are static.
+  2. **static scratch shapes** — every ``pltpu.VMEM(shape, dtype)``
+     scratch allocation takes a literal tuple of static expressions
+     (constants, names, arithmetic over them), never a traced value.
+  3. **wrap predication** — a carried load ``ref[... t-1 ...]`` (``t``
+     the grid program id) wraps at ``t==0``; the load is only legal when
+     the same statement short-circuits on a ``t == 0`` test (the
+     ``first`` predicate idiom).  A look-ahead load ``ref[... t+1 ...]``
+     must be clamped (``jnp.minimum``/``clip``/``%``) inside the index.
+
+A *kernel function* is any function whose parameters include at least
+one ``*_ref`` name in a module under ``src/repro/kernels/``.  Output
+refs are recognized by name (``out_ref``, ``o_ref``, ``*_out_ref``,
+``out_*_ref``) — the repo's (and Pallas's docs') naming convention.
+
+Besides violations, the checker records positive evidence in
+``facts["kernels"]``: per kernel, per out-ref store/read counts and the
+guarded-carried-load tally.  That is the static half of the Mosaic
+write-only verification the ROADMAP leaves open, and the committed
+``BENCH_analysis.json`` carries it as a proof artifact.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import (
+    AnalysisContext,
+    Checker,
+    SourceFile,
+    call_name,
+    register,
+)
+
+OUT_REF_RE = re.compile(r"^(?:o_ref|out_ref|\w*_out_ref|out_\w*_ref)$")
+REF_RE = re.compile(r"^\w*_ref$")
+META_ATTRS = {"shape", "dtype", "ndim", "at"}
+CLAMP_CALLS = {"minimum", "clip", "mod", "remainder"}
+
+
+def _is_static_shape_expr(node: ast.AST) -> bool:
+    """Constants, names, and arithmetic over them — no calls, no subscripts
+    of traced values (attribute chains like ``x.shape`` stay static)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int)
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return True
+    if isinstance(node, ast.BinOp):
+        return _is_static_shape_expr(node.left) and _is_static_shape_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_static_shape_expr(node.operand)
+    return False
+
+
+def _program_id_vars(fn: ast.FunctionDef) -> set[str]:
+    """Names assigned from ``pl.program_id(...)`` in the kernel body."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = call_name(node.value) or ""
+            if name.endswith("program_id"):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+def _offset_uses(node: ast.AST, var: str, op: type[ast.operator]) -> bool:
+    """Does ``node`` contain ``var <op> <const>`` (e.g. ``t - 1``)?"""
+    for n in ast.walk(node):
+        if (
+            isinstance(n, ast.BinOp)
+            and isinstance(n.op, op)
+            and isinstance(n.left, ast.Name)
+            and n.left.id == var
+            and isinstance(n.right, ast.Constant)
+        ):
+            return True
+    return False
+
+
+def _statement_of(sf: SourceFile, node: ast.AST) -> ast.stmt:
+    stmt = node
+    for anc in sf.ancestors(node):
+        if isinstance(anc, ast.stmt):
+            stmt = anc
+            break
+    return stmt  # type: ignore[return-value]
+
+
+@register
+class PallasKernelContract(Checker):
+    check_id = "pallas-kernel-contract"
+    description = (
+        "Pallas kernel bodies: out_ref stored exactly once and never read "
+        "(Mosaic write-only), static VMEM scratch shapes, t==0 wrap "
+        "predication on carried loads"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        kernels: list[dict] = []
+        for sf in ctx.under("src/repro/kernels/"):
+            for node in ast.walk(sf.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    info = self._check_kernel(sf, node)
+                    if info is not None:
+                        kernels.append(info)
+            self._check_scratch_shapes(sf)
+        self.facts["kernels"] = kernels
+
+    # -- out_ref discipline + wrap predication ------------------------------
+
+    def _check_kernel(self, sf: SourceFile, fn: ast.FunctionDef) -> dict | None:
+        params = [a.arg for a in fn.args.args + fn.args.kwonlyargs]
+        refs = [p for p in params if REF_RE.match(p)]
+        if not refs:
+            return None
+        out_refs = [p for p in refs if OUT_REF_RE.match(p)]
+        info: dict = {"file": sf.path, "kernel": fn.name, "out_refs": []}
+
+        for name in out_refs:
+            stores, aug_stores, reads = self._ref_uses(sf, fn, name)
+            info["out_refs"].append(
+                {"name": name, "stores": stores, "aug_stores": aug_stores,
+                 "reads": reads}
+            )
+            if aug_stores:
+                self.emit(
+                    sf, fn,
+                    f"kernel {fn.name!r}: output ref {name!r} is read-modify-"
+                    f"written ({aug_stores}x '+='); Mosaic requires the output "
+                    "block to stay write-only — accumulate in VMEM scratch and "
+                    "flush once (DESIGN.md §13)",
+                )
+            if reads:
+                self.emit(
+                    sf, fn,
+                    f"kernel {fn.name!r}: output ref {name!r} is read {reads}x; "
+                    "the output block must be write-only (read metadata like "
+                    ".shape is allowed, element reads are not)",
+                )
+            if stores != 1:
+                self.emit(
+                    sf, fn,
+                    f"kernel {fn.name!r}: output ref {name!r} is stored "
+                    f"{stores}x; the streaming-accumulation contract is "
+                    "exactly one store per block (the predicated flush)",
+                )
+
+        info["carried_loads"], info["guarded_loads"] = self._check_wrap_guards(
+            sf, fn, refs
+        )
+        return info
+
+    def _ref_uses(
+        self, sf: SourceFile, fn: ast.FunctionDef, name: str
+    ) -> tuple[int, int, int]:
+        """(subscript stores, augmented stores, element reads) of ``name``."""
+        stores = aug = reads = 0
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Name) and node.id == name):
+                continue
+            parent = sf.parent(node)
+            if isinstance(parent, ast.Subscript) and parent.value is node:
+                gp = sf.parent(parent)
+                if isinstance(gp, ast.AugAssign) and gp.target is parent:
+                    aug += 1
+                elif isinstance(parent.ctx, ast.Store):
+                    stores += 1
+                else:  # Load or Del of an element
+                    reads += 1
+            elif isinstance(parent, ast.Attribute) and parent.attr in META_ATTRS:
+                continue
+            elif isinstance(parent, (ast.arguments, ast.arg)):
+                continue
+            elif isinstance(node.ctx, ast.Load):
+                reads += 1
+        return stores, aug, reads
+
+    def _check_wrap_guards(
+        self, sf: SourceFile, fn: ast.FunctionDef, refs: list[str]
+    ) -> tuple[int, int]:
+        pids = _program_id_vars(fn)
+        carried = guarded = 0
+        if not pids:
+            return carried, guarded
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Subscript)
+                and isinstance(node.ctx, ast.Load)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in refs
+            ):
+                continue
+            for t in pids:
+                if _offset_uses(node.slice, t, ast.Sub):
+                    carried += 1
+                    stmt = _statement_of(sf, node)
+                    if self._has_zero_test(stmt, t):
+                        guarded += 1
+                    else:
+                        self.emit(
+                            sf, node,
+                            f"kernel {fn.name!r}: carried load "
+                            f"{ast.unparse(node)} wraps at {t}==0 but the "
+                            f"statement has no short-circuiting '{t} == 0' "
+                            "test (the 'first' predicate idiom, DESIGN.md §13)",
+                        )
+                if _offset_uses(node.slice, t, ast.Add):
+                    carried += 1
+                    if self._is_clamped(node.slice, t):
+                        guarded += 1
+                    else:
+                        self.emit(
+                            sf, node,
+                            f"kernel {fn.name!r}: look-ahead load "
+                            f"{ast.unparse(node)} indexes past the grid on the "
+                            f"last step; clamp the index (jnp.minimum/clip) "
+                            "inside the subscript",
+                        )
+        return carried, guarded
+
+    @staticmethod
+    def _has_zero_test(stmt: ast.stmt, var: str) -> bool:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Compare) and len(n.ops) == 1:
+                l, r = n.left, n.comparators[0]
+                if isinstance(n.ops[0], ast.Eq) and (
+                    (isinstance(l, ast.Name) and l.id == var
+                     and isinstance(r, ast.Constant) and r.value == 0)
+                    or (isinstance(r, ast.Name) and r.id == var
+                        and isinstance(l, ast.Constant) and l.value == 0)
+                ):
+                    return True
+        return False
+
+    @staticmethod
+    def _is_clamped(index: ast.AST, var: str) -> bool:
+        for n in ast.walk(index):
+            if isinstance(n, ast.Call):
+                name = (call_name(n) or "").rsplit(".", 1)[-1]
+                if name in CLAMP_CALLS and _offset_uses(n, var, ast.Add):
+                    return True
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod):
+                if _offset_uses(n.left, var, ast.Add):
+                    return True
+        return False
+
+    # -- scratch allocation --------------------------------------------------
+
+    def _check_scratch_shapes(self, sf: SourceFile) -> None:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node) or ""
+            if not name.endswith(("pltpu.VMEM", "pltpu.SMEM")):
+                continue
+            if not node.args:
+                continue
+            shape = node.args[0]
+            if isinstance(shape, (ast.Tuple, ast.List)):
+                bad = [e for e in shape.elts if not _is_static_shape_expr(e)]
+            else:
+                bad = [] if _is_static_shape_expr(shape) else [shape]
+            for e in bad:
+                self.emit(
+                    sf, node,
+                    f"scratch allocation {name}({ast.unparse(shape)}, ...) has "
+                    f"a non-static shape element {ast.unparse(e)!r}; scratch "
+                    "shapes must be resolvable at trace time",
+                )

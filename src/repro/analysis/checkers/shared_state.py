@@ -1,0 +1,145 @@
+"""shared-state-safety: module-level mutable state needs a sanctioned owner.
+
+``repro.serve`` and ``repro.dse`` are the layers that hold state across
+requests — compiled-program caches, band-keyed tune results, bucket
+executors.  A bare module-level ``dict``/``list``/``set`` mutated from
+request-handling functions is how cross-tenant aliasing bugs start (the
+autotuner band-cache poisoning of PR 8 was exactly a shared dict fed a
+partial result).  The contract (DESIGN.md §15): module-level mutable
+containers in the watched packages may only be mutated through
+
+  * an :class:`repro.core.memo.IdentityKeyedCache` (anchored, verified,
+    bounded),
+  * a ``functools.lru_cache``-decorated function (the compiled-program
+    memo idiom),
+  * or an explicitly documented single-writer path, suppressed in place
+    with ``# repro: ignore[shared-state-safety]`` and a reason.
+
+Import-time initialization (populating an axis table at module load) is
+single-threaded and allowed; the checker flags only mutations that
+happen inside functions — i.e. at request time.  Instance state
+(``self._buckets``) is out of scope: it is owned by its object and the
+service's tick loop is the documented single writer.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    AnalysisContext,
+    Checker,
+    SourceFile,
+    call_name,
+    register,
+)
+
+WATCHED_PREFIXES = ("src/repro/serve/", "src/repro/dse/")
+MUTABLE_CTORS = {"dict", "list", "set", "deque", "defaultdict", "OrderedDict",
+                 "Counter"}
+SANCTIONED_CTORS = {"IdentityKeyedCache", "WallTimeMemo"}
+MUTATING_METHODS = {
+    "append", "appendleft", "add", "update", "pop", "popleft", "popitem",
+    "clear", "setdefault", "extend", "insert", "remove", "discard",
+}
+
+
+def _module_level_containers(sf: SourceFile) -> dict[str, tuple[int, bool]]:
+    """name -> (lineno, sanctioned) for module-level mutable bindings."""
+    out: dict[str, tuple[int, bool]] = {}
+    for node in sf.tree.body:
+        targets: list[ast.expr] = []
+        value: ast.expr | None = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if value is None:
+            continue
+        mutable = sanctioned = False
+        if isinstance(value, (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                              ast.ListComp, ast.SetComp)):
+            mutable = True
+        elif isinstance(value, ast.Call):
+            ctor = (call_name(value) or "").rsplit(".", 1)[-1]
+            if ctor in MUTABLE_CTORS:
+                mutable = True
+            elif ctor in SANCTIONED_CTORS:
+                mutable, sanctioned = True, True
+        if not mutable:
+            continue
+        for t in targets:
+            # dunders (__all__ etc.) are module metadata, not shared state
+            if isinstance(t, ast.Name) and not t.id.startswith("__"):
+                out[t.id] = (node.lineno, sanctioned)
+    return out
+
+
+@register
+class SharedStateSafety(Checker):
+    check_id = "shared-state-safety"
+    description = (
+        "Module-level mutable containers in repro.serve/repro.dse may only "
+        "be mutated via IdentityKeyedCache/lru_cache or documented "
+        "single-writer paths"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        audited: dict[str, list[str]] = {}
+        for sf in ctx.files:
+            if not any(sf.path.startswith(p) for p in WATCHED_PREFIXES):
+                continue
+            containers = _module_level_containers(sf)
+            if containers:
+                audited[sf.module] = sorted(containers)
+            unsanctioned = {n for n, (_, ok) in containers.items() if not ok}
+            if unsanctioned:
+                self._check_mutations(sf, unsanctioned)
+        self.facts["containers"] = audited
+
+    def _check_mutations(self, sf: SourceFile, names: set[str]) -> None:
+        # only mutations inside function bodies (request time) are findings
+        funcs = [
+            n for n in ast.walk(sf.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for fn in funcs:
+            # names shadowed by a local binding are not the module container
+            shadowed = {
+                a.arg for a in fn.args.posonlyargs + fn.args.args
+                + fn.args.kwonlyargs
+            }
+            live = names - shadowed
+            if not live:
+                continue
+            for node in ast.walk(fn):
+                target: str | None = None
+                how = ""
+                if isinstance(node, ast.Subscript) and \
+                        isinstance(node.value, ast.Name) and \
+                        isinstance(node.ctx, (ast.Store, ast.Del)):
+                    target, how = node.value.id, "item assignment"
+                elif isinstance(node, ast.AugAssign):
+                    base = node.target
+                    if isinstance(base, ast.Subscript):
+                        base = base.value
+                    if isinstance(base, ast.Name):
+                        target, how = base.id, "augmented assignment"
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        isinstance(node.func.value, ast.Name) and \
+                        node.func.attr in MUTATING_METHODS:
+                    target, how = node.func.value.id, f".{node.func.attr}()"
+                elif isinstance(node, ast.Global):
+                    for nm in node.names:
+                        if nm in live:
+                            target, how = nm, "global rebinding"
+                            break
+                if target in live:
+                    self.emit(
+                        sf, node,
+                        f"module-level container {target!r} mutated at request "
+                        f"time ({how}) in {fn.name!r}; route shared state "
+                        "through IdentityKeyedCache/lru_cache or document the "
+                        "single writer and suppress (DESIGN.md §15)",
+                    )

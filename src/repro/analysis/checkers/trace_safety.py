@@ -1,0 +1,374 @@
+"""trace-safety: no host syncs or Python control flow on traced values.
+
+Inside a function JAX traces (a ``jax.jit``/``jax.vmap`` target, a
+``lax.scan``/``fori_loop``/``while_loop``/``cond`` body, a Pallas kernel),
+the classic hazards are
+
+  * ``.item()`` / ``float()`` / ``int()`` / ``bool()`` / ``np.asarray``
+    on a traced value — a device→host sync (or a
+    ``TracerArrayConversionError``) in the middle of the trace;
+  * Python ``if``/``while`` on a traced value — a
+    ``TracerBoolConversionError``, or worse, a silent recompile per
+    concrete value when the value is marked static.
+
+The call graph is approximated **per module** (DESIGN.md §15): roots are
+functions decorated with / passed to the tracing entry points above,
+plus ``functools.partial`` aliases of them; edges follow calls to
+module-local functions and ``self.<method>`` calls within a class.
+Cross-module edges are not followed — the checker is a linter, not a
+whole-program analyzer, and every past instance of this bug class
+(ROADMAP host-sync items) was local to one module.
+
+"Traced value" is likewise an approximation with no false positives on
+static-shape idioms: a name is traced if it is assigned from a
+``jnp.*``/``lax.*``/``pl.*``/``jax.*`` call (except metadata), from a
+subscript of a ``*_ref`` parameter, or from an expression containing an
+already-traced name.  ``x.shape``/``x.dtype``/``len(x)`` stay static, so
+geometry guards inside jitted wrappers (``kernels.mttkrp.kernel``'s
+shape ``raise`` checks) do not trip the checker.  Function parameters
+are deliberately NOT assumed traced: kernels routinely branch on static
+Python arguments bound via ``functools.partial`` (``causal`` in the
+flash kernel), and ``static_argnames`` make jit parameters concrete.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    AnalysisContext,
+    Checker,
+    SourceFile,
+    call_name,
+    dotted_name,
+    names_in,
+    register,
+)
+
+#: call suffix -> positional args that are traced (None = all).
+TRACING_ENTRY_ARGS: dict[str, tuple[int, ...] | None] = {
+    "jax.jit": (0,),
+    "jit": (0,),
+    "jax.vmap": (0,),
+    "vmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "lax.scan": (0,),
+    "jax.lax.scan": (0,),
+    "lax.fori_loop": (2,),
+    "jax.lax.fori_loop": (2,),
+    "lax.while_loop": (0, 1),
+    "jax.lax.while_loop": (0, 1),
+    "lax.cond": (1, 2),
+    "jax.lax.cond": (1, 2),
+    "lax.switch": None,
+    "jax.lax.switch": None,
+    "pl.pallas_call": (0,),
+    "pallas_call": (0,),
+}
+
+#: Dotted roots whose calls produce traced values.
+TRACED_NAMESPACES = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "pl.", "pltpu.")
+#: jax./jnp. attrs that stay host-side / static.
+STATIC_CALL_SUFFIXES = (
+    ".shape", ".dtype", ".ndim", ".PRNGKey", ".split",
+    ".ShapeDtypeStruct", ".BlockSpec", ".VMEM", ".SMEM",
+)
+
+HOST_CONVERSIONS = {"float", "int", "bool", "complex"}
+NUMPY_SYNC_CALLS = {"asarray", "array", "copy"}
+
+
+def _partial_target(node: ast.AST) -> str | None:
+    """``functools.partial(f, ...)`` -> ``f``'s dotted name."""
+    if isinstance(node, ast.Call):
+        name = call_name(node) or ""
+        if name in ("functools.partial", "partial") and node.args:
+            from repro.analysis.core import dotted_name
+
+            return dotted_name(node.args[0])
+    return None
+
+
+class _FnInfo:
+    def __init__(self, node: ast.FunctionDef, qualname: str, cls: str | None):
+        self.node = node
+        self.qualname = qualname
+        self.cls = cls  # enclosing class name, if a method
+        self.calls: set[str] = set()  # local names / self-methods called
+        self.traced_root = False
+
+
+def _index_functions(sf: SourceFile) -> dict[ast.AST, _FnInfo]:
+    """Every function in the module with its enclosing class (if any)."""
+    infos: dict[ast.AST, _FnInfo] = {}
+
+    def visit(node: ast.AST, cls: str | None, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                infos[child] = _FnInfo(child, qual, cls)
+                visit(child, cls, f"{qual}.")
+            elif isinstance(child, ast.ClassDef):
+                visit(child, child.name, f"{prefix}{child.name}.")
+            else:
+                visit(child, cls, prefix)
+
+    visit(sf.tree, None, "")
+    return infos
+
+
+@register
+class TraceSafety(Checker):
+    check_id = "trace-safety"
+    description = (
+        "No .item()/float()/np.asarray host syncs or Python if/while on "
+        "traced values inside functions reachable from jit/scan/vmap bodies "
+        "(per-module call graph)"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        reachable_total = 0
+        for sf in ctx.under("src/"):
+            reachable_total += self._check_module(sf)
+        self.facts["traced_functions"] = reachable_total
+
+    def _check_module(self, sf: SourceFile) -> int:
+        infos = _index_functions(sf)
+        by_name: dict[str, list[_FnInfo]] = {}
+        for info in infos.values():
+            by_name.setdefault(info.node.name, []).append(info)
+
+        # functools.partial aliases: alias name -> underlying function name
+        aliases: dict[str, str] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                target = _partial_target(node.value)
+                if target:
+                    aliases[node.targets[0].id] = target.rsplit(".", 1)[-1]
+
+        def mark_root(name: str) -> None:
+            name = aliases.get(name, name)
+            for info in by_name.get(name, []):
+                info.traced_root = True
+
+        # Roots: decorated with a tracing transform…
+        for info in infos.values():
+            for dec in info.node.decorator_list:
+                name = call_name(dec) if isinstance(dec, ast.Call) \
+                    else dotted_name(dec)
+                if name is None:
+                    continue
+                if any(name == k or name.endswith("." + k) for k in
+                       ("jit", "vmap", "grad", "checkpoint")):
+                    info.traced_root = True
+                if name in ("functools.partial", "partial") and \
+                        isinstance(dec, ast.Call) and dec.args:
+                    inner = dotted_name(dec.args[0])
+                    if inner and inner.rsplit(".", 1)[-1] in ("jit", "vmap", "grad"):
+                        info.traced_root = True
+
+        # …or passed by name into a tracing entry point.
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node) or ""
+            spec = None
+            for suffix, argpos in TRACING_ENTRY_ARGS.items():
+                if name == suffix or name.endswith("." + suffix):
+                    spec = argpos
+                    break
+            else:
+                continue
+            args = node.args if spec is None else [
+                node.args[i] for i in spec if i < len(node.args)
+            ]
+            for a in args:
+                if isinstance(a, ast.Name):
+                    mark_root(a.id)
+                elif isinstance(a, ast.Lambda):
+                    # a lambda body has no FunctionDef entry; check the
+                    # functions it calls instead
+                    for called in names_in(a.body):
+                        mark_root(called)
+
+        # Call edges: local function names and self.<method>.
+        for info in infos.values():
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if isinstance(node.func, ast.Name):
+                    callee = aliases.get(node.func.id, node.func.id)
+                    if callee in by_name:
+                        info.calls.add(callee)
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in by_name
+                ):
+                    info.calls.add(node.func.attr)
+
+        # Propagate reachability to a fixpoint.
+        changed = True
+        while changed:
+            changed = False
+            for info in infos.values():
+                if not info.traced_root:
+                    continue
+                for callee in info.calls:
+                    for target in by_name.get(callee, []):
+                        if not target.traced_root:
+                            target.traced_root = True
+                            changed = True
+        # A nested def inside a traced function runs at trace time too.
+        for info in infos.values():
+            if not info.traced_root:
+                continue
+            for node in ast.walk(info.node):
+                if node is not info.node and node in infos and \
+                        not infos[node].traced_root:
+                    infos[node].traced_root = True
+                    changed = True
+
+        count = 0
+        for info in infos.values():
+            if info.traced_root:
+                count += 1
+                self._check_traced_fn(sf, info)
+        return count
+
+    # -- per-function hazards ------------------------------------------------
+
+    def _traced_locals(self, fn: ast.FunctionDef) -> set[str]:
+        ref_params = {
+            a.arg for a in fn.args.args + fn.args.kwonlyargs
+            if a.arg.endswith("_ref")
+        }
+
+        def expr_is_traced(node: ast.AST, traced: set[str]) -> bool:
+            for n in ast.walk(node):
+                if isinstance(n, ast.Call):
+                    name = call_name(n) or ""
+                    if name.endswith(STATIC_CALL_SUFFIXES):
+                        continue
+                    if any(name.startswith(p) for p in TRACED_NAMESPACES):
+                        return True
+                if isinstance(n, ast.Subscript) and \
+                        isinstance(n.value, ast.Name) and n.value.id in ref_params:
+                    return True
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) and \
+                        n.id in traced:
+                    # metadata of a traced value is static
+                    return True
+            return False
+
+        traced: set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(fn):
+                targets: list[ast.expr] = []
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) and \
+                        node.value is not None:
+                    targets, value = [node.target], node.value
+                else:
+                    continue
+                # x.shape / len(x) of traced stay static
+                if isinstance(value, ast.Attribute) and \
+                        value.attr in ("shape", "dtype", "ndim"):
+                    continue
+                if isinstance(value, ast.Call) and \
+                        (call_name(value) or "") == "len":
+                    continue
+                if not expr_is_traced(value, traced):
+                    continue
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and n.id not in traced:
+                            traced.add(n.id)
+                            changed = True
+        return traced
+
+    def _check_traced_fn(self, sf: SourceFile, info: _FnInfo) -> None:
+        fn = info.node
+        traced = self._traced_locals(fn)
+
+        def metadata_subtrees(node: ast.AST) -> set[ast.AST]:
+            """Nodes reached only via ``x.shape``/``.dtype``/``.ndim`` or
+            ``len(x)`` — static even when ``x`` itself is traced, so a
+            shape guard like ``if rows.shape != (n,)`` never trips."""
+            static: set[ast.AST] = set()
+            for n in ast.walk(node):
+                sub: ast.AST | None = None
+                if isinstance(n, ast.Attribute) and \
+                        n.attr in ("shape", "dtype", "ndim"):
+                    sub = n.value
+                elif isinstance(n, ast.Call) and \
+                        (call_name(n) or "") == "len" and n.args:
+                    sub = n.args[0]
+                if sub is not None:
+                    static.update(ast.walk(sub))
+            return static
+
+        def references_traced(node: ast.AST) -> bool:
+            static = metadata_subtrees(node)
+            for n in ast.walk(node):
+                if n in static:
+                    continue
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                        and n.id in traced:
+                    return True
+                if isinstance(n, ast.Call):
+                    name = call_name(n) or ""
+                    if any(name.startswith(p) for p in TRACED_NAMESPACES) and \
+                            not name.endswith(STATIC_CALL_SUFFIXES):
+                        return True
+            return False
+
+        for node in ast.walk(fn):
+            # skip hazards inside nested defs — they get their own pass
+            if node is not fn and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                continue
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    self.emit(
+                        sf, node,
+                        f"{info.qualname}: .item() inside traced code is a "
+                        "device->host sync; keep the value on device or move "
+                        "the read outside the jit",
+                    )
+                elif name.rsplit(".", 1)[0] in ("np", "numpy") and \
+                        name.rsplit(".", 1)[-1] in NUMPY_SYNC_CALLS:
+                    self.emit(
+                        sf, node,
+                        f"{info.qualname}: {name}(...) inside traced code "
+                        "forces host materialization "
+                        "(TracerArrayConversionError at best); use jnp",
+                    )
+                elif name in HOST_CONVERSIONS and node.args and \
+                        references_traced(node.args[0]):
+                    self.emit(
+                        sf, node,
+                        f"{info.qualname}: {name}() on a traced value is a "
+                        "host sync (TracerBoolConversionError under jit); "
+                        "keep the computation in jnp",
+                    )
+            elif isinstance(node, (ast.If, ast.While)) and \
+                    references_traced(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self.emit(
+                    sf, node,
+                    f"{info.qualname}: Python '{kind}' on a traced value "
+                    f"({ast.unparse(node.test)}) — use lax.cond/select or "
+                    "jnp.where; concrete branching inside a trace either "
+                    "raises or recompiles per value",
+                )

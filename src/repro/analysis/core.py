@@ -1,0 +1,341 @@
+"""AST-based static-analysis framework with repo-specific contract checkers.
+
+The last several PRs each shipped satellite fixes for the same
+mechanically-detectable bug classes: memo keys missing fields (the
+autotuner ``reps`` omission, band-cache poisoning), parameters silently
+not threaded through dispatch layers (``rows_per_block`` forwarding),
+and host-sync / recompile hazards inside jitted code.  This package
+(DESIGN.md §15) turns those implicit contracts into executable checks:
+
+  * :class:`Checker` — one contract, one check id, one ``run(ctx)``;
+    registered in :data:`REGISTRY` via :func:`register`;
+  * :class:`Finding` — a violation at ``path:line`` with a stable
+    fingerprint (check id, path, message) used by the CI baseline;
+  * suppression — a ``# repro: ignore[check-id]`` comment on the
+    finding's line (or the line above it) marks the finding as reviewed
+    and keeps it out of the failing set; every suppression should say
+    why on the same line;
+  * :class:`Report` — machine-readable JSON (findings, per-checker
+    counts, and each checker's positive ``facts`` such as the Pallas
+    write-only proof), emitted by ``scripts/run_analysis.py`` and
+    committed as ``BENCH_analysis.json``.
+
+The pass is pure AST inspection: no imports of the scanned code, no JAX
+tracing, so it runs in milliseconds and cannot be confused by the
+environment it runs on (the Mosaic write-only property is checked from
+kernel source exactly because this container has no TPU).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Callable, Iterable, Sequence
+
+__all__ = [
+    "AnalysisContext",
+    "Checker",
+    "Finding",
+    "REGISTRY",
+    "Report",
+    "SourceFile",
+    "default_checkers",
+    "register",
+    "run_analysis",
+]
+
+#: ``# repro: ignore[check-id]`` (one or more comma-separated ids).
+SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Za-z0-9_,\- ]+)\]")
+
+#: Directories scanned by default, relative to the repo root.
+DEFAULT_SCAN_DIRS = ("src", "scripts", "benchmarks", "examples")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation at a source location.
+
+    ``fingerprint`` deliberately excludes the line number: the CI
+    baseline must keep matching a known finding when unrelated edits
+    shift it a few lines.
+    """
+
+    check_id: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+    suppressed: bool = False
+
+    @property
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.check_id, self.path, self.message)
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class SourceFile:
+    """One parsed source file: text, AST, and suppression table."""
+
+    def __init__(self, abspath: Path, root: Path) -> None:
+        self.abspath = abspath
+        self.root = root
+        self.path = abspath.relative_to(root).as_posix()
+        self.text = abspath.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=self.path)
+        self._parents: dict[ast.AST, ast.AST] | None = None
+        # line -> suppressed check ids on that line
+        self.suppressions: dict[int, set[str]] = {}
+        for lineno, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                ids = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                self.suppressions.setdefault(lineno, set()).update(ids)
+
+    @property
+    def module(self) -> str:
+        """Dotted module name for files under ``src/``; else the stem."""
+        parts = Path(self.path).with_suffix("").parts
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        name = ".".join(parts)
+        return name[: -len(".__init__")] if name.endswith(".__init__") else name
+
+    def is_suppressed(self, line: int, check_id: str) -> bool:
+        """Suppressed on the finding's line or the standalone line above."""
+        for ln in (line, line - 1):
+            if check_id in self.suppressions.get(ln, ()):  # exact id only
+                return True
+        return False
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        if self._parents is None:
+            self._parents = {}
+            for outer in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(outer):
+                    self._parents[child] = outer
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+
+class AnalysisContext:
+    """Everything a checker sees: the parsed file set plus the root."""
+
+    def __init__(self, root: Path, files: Sequence[SourceFile]) -> None:
+        self.root = Path(root)
+        self.files = list(files)
+        self._by_path = {f.path: f for f in self.files}
+
+    def file(self, path: str) -> SourceFile | None:
+        return self._by_path.get(path)
+
+    def under(self, prefix: str) -> list[SourceFile]:
+        """Files whose repo-relative path starts with ``prefix``."""
+        return [f for f in self.files if f.path.startswith(prefix)]
+
+
+class Checker:
+    """Base class: one contract.  Subclasses set ``check_id`` and
+    ``description`` and implement :meth:`run`, emitting findings through
+    :meth:`emit` (which applies the suppression table) and optional
+    positive evidence through ``self.facts``."""
+
+    check_id: str = ""
+    description: str = ""
+
+    def __init__(self) -> None:
+        self.findings: list[Finding] = []
+        self.facts: dict = {}
+
+    def emit(self, sf: SourceFile, node: ast.AST | int, message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        f = Finding(
+            check_id=self.check_id,
+            path=sf.path,
+            line=line,
+            message=message,
+            suppressed=sf.is_suppressed(line, self.check_id),
+        )
+        self.findings.append(f)
+        return f
+
+    def run(self, ctx: AnalysisContext) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+#: check id -> checker class.  Populated by :func:`register` at import of
+#: ``repro.analysis.checkers``.
+REGISTRY: dict[str, type[Checker]] = {}
+
+
+def register(cls: type[Checker]) -> type[Checker]:
+    if not cls.check_id:
+        raise ValueError(f"{cls.__name__} must declare a check_id")
+    if cls.check_id in REGISTRY and REGISTRY[cls.check_id] is not cls:
+        raise ValueError(f"duplicate checker id {cls.check_id!r}")
+    REGISTRY[cls.check_id] = cls
+    return cls
+
+
+def default_checkers() -> list[str]:
+    """All registered check ids, in registration order."""
+    from repro.analysis import checkers as _checkers  # noqa: F401 - registers
+
+    return list(REGISTRY)
+
+
+@dataclasses.dataclass
+class Report:
+    """The outcome of one analysis run, JSON-serializable."""
+
+    root: str
+    files_scanned: int
+    checkers: list[dict]  # {id, description, findings, suppressed}
+    findings: list[Finding]
+    facts: dict
+
+    @property
+    def active(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def suppressed(self) -> list[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    def by_check(self) -> dict[str, list[Finding]]:
+        out: dict[str, list[Finding]] = {}
+        for f in self.findings:
+            out.setdefault(f.check_id, []).append(f)
+        return out
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": "repro.analysis/v1",
+            "root": self.root,
+            "files_scanned": self.files_scanned,
+            "checkers": self.checkers,
+            "totals": {
+                "findings": len(self.findings),
+                "active": len(self.active),
+                "suppressed": len(self.suppressed),
+            },
+            "findings": [f.to_dict() for f in self.findings],
+            "facts": self.facts,
+        }
+
+    def to_json(self, **kwargs) -> str:
+        kwargs.setdefault("indent", 2)
+        kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **kwargs)
+
+
+def collect_files(
+    root: Path, dirs: Sequence[str] = DEFAULT_SCAN_DIRS
+) -> list[SourceFile]:
+    """Parse every ``*.py`` under ``dirs`` (repo-relative), sorted."""
+    root = Path(root)
+    out: list[SourceFile] = []
+    for d in dirs:
+        base = root / d
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            out.append(SourceFile(path, root))
+    return out
+
+
+def run_analysis(
+    root: Path | str,
+    *,
+    checks: Sequence[str] | None = None,
+    dirs: Sequence[str] = DEFAULT_SCAN_DIRS,
+    files: Sequence[SourceFile] | None = None,
+    checker_factory: Callable[[str], Checker] | None = None,
+) -> Report:
+    """Run the selected checkers over the repo and return a :class:`Report`.
+
+    ``checks=None`` runs every registered checker; ``files`` injects a
+    pre-parsed file set (the fixture tests use this to point a single
+    checker at a snippet).
+    """
+    root = Path(root)
+    ids = list(checks) if checks is not None else default_checkers()
+    unknown = [c for c in ids if c not in REGISTRY]
+    if unknown:
+        from repro.analysis import checkers as _checkers  # noqa: F401
+
+        unknown = [c for c in ids if c not in REGISTRY]
+        if unknown:
+            raise ValueError(
+                f"unknown check ids {unknown}; registered: {sorted(REGISTRY)}"
+            )
+    ctx = AnalysisContext(root, collect_files(root, dirs) if files is None else files)
+
+    checker_rows: list[dict] = []
+    findings: list[Finding] = []
+    facts: dict = {}
+    for cid in ids:
+        checker = checker_factory(cid) if checker_factory else REGISTRY[cid]()
+        checker.run(ctx)
+        findings.extend(checker.findings)
+        if checker.facts:
+            facts[cid] = checker.facts
+        checker_rows.append(
+            {
+                "id": cid,
+                "description": checker.description,
+                "findings": sum(not f.suppressed for f in checker.findings),
+                "suppressed": sum(f.suppressed for f in checker.findings),
+            }
+        )
+    findings.sort(key=lambda f: (f.path, f.line, f.check_id))
+    return Report(
+        root=str(root),
+        files_scanned=len(ctx.files),
+        checkers=checker_rows,
+        findings=findings,
+        facts=facts,
+    )
+
+
+# --------------------------------------------------------------------------
+# Shared AST helpers used by several checkers
+# --------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All Name identifiers loaded anywhere inside ``node``."""
+    return {
+        n.id
+        for n in ast.walk(node)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+    }

@@ -10,7 +10,6 @@ executable paths (kernels, CP-ALS, cache simulator validation).
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
 from repro.data.frostt import FROSTT_TENSORS, FrosttTensor

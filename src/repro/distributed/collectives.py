@@ -12,12 +12,9 @@ collectives where the automatic choice is wasteful:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 __all__ = ["compressed_psum", "ring_allgather_matmul"]
 

@@ -13,11 +13,10 @@ layer — vs all-gathering the (B, S, KV, D) cache.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.models.attention import _out_proj, _project_qkv, decode_attention

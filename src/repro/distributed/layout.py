@@ -16,7 +16,6 @@ boundaries — hence a module-level setting, scoped via context manager).
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 
 _LAYOUT = "2d"
 

@@ -19,12 +19,11 @@ Two schemes, mirroring DESIGN.md §2's changed-assumptions note:
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.sparse_tensor import SparseTensor

@@ -24,7 +24,6 @@ import itertools
 from typing import Any, Mapping, Sequence
 
 from repro.core.accelerator import PAPER_ACCEL, AcceleratorConfig
-from repro.core.cache_sim import CacheConfig
 from repro.core.hierarchy import (
     MemoryHierarchy,
     MemoryLevel,

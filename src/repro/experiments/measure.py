@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core.cache_sim import CacheStats, simulate_traces
 from repro.core.hierarchy import CacheGeometry
-from repro.core.sparse_tensor import MTTKRPPlan, SparseTensor, build_mttkrp_plan
+from repro.core.sparse_tensor import SparseTensor, build_mttkrp_plan
 from repro.data.frostt import FrosttTensor
 from repro.dse.evaluator import HitRateCache, geometry_sim_config
 
@@ -126,6 +126,9 @@ def mode_cost_analysis(
     impl: str,
     *,
     backend: str | None = None,
+    tile_nnz: int = 256,
+    rows_per_block: int = 256,
+    ordering: str | None = None,
 ) -> tuple[float | None, float | None]:
     """(flops, bytes accessed) of one mode's MTTKRP from the compiled HLO.
 
@@ -133,6 +136,11 @@ def mode_cost_analysis(
     ``cost_analysis()``.  Returns ``(None, None)`` when the backend does
     not expose one for this computation (Pallas custom calls on some
     backends; the sharded path is measured in its own process).
+
+    ``tile_nnz``/``rows_per_block``/``ordering`` select the pallas plan
+    geometry so the lowered computation is the one that was measured —
+    a default-geometry plan can have a different tile count and padding
+    than the measured run, skewing flops/bytes.
     """
     import jax
     import jax.numpy as jnp
@@ -147,9 +155,16 @@ def mode_cost_analysis(
         if impl == "pallas":
             from repro.kernels.mttkrp.ops import mttkrp_pallas
 
-            plan = build_mttkrp_plan(tensor, mode)
+            plan = build_mttkrp_plan(
+                tensor,
+                mode,
+                tile_nnz=tile_nnz,
+                rows_per_block=rows_per_block,
+                ordering=ordering if ordering is not None else "lex",
+            )
 
             def fn(*facs):
+                # repro: ignore[kwarg-threading] — plan= encodes tile_nnz/rows_per_block/ordering
                 return mttkrp_pallas(tensor, facs, mode, plan=plan, backend=backend)
 
         else:  # ref order; also the stand-in cost for sharded per-shard work
@@ -267,6 +282,7 @@ def measure_cp_als(
         }
 
         def base(t, f, m):
+            # repro: ignore[kwarg-threading] — plan= encodes tile_nnz/rows_per_block/ordering
             return mttkrp_pallas(t, f, m, plan=plans[m], backend=backend)
 
     elif impl == "sharded":
@@ -290,6 +306,7 @@ def measure_cp_als(
         return out
 
     t0 = time.perf_counter()
+    # repro: ignore[kwarg-threading] — mttkrp_fn= closes over backend and the geometry plans
     state = cp_als(
         tensor, rank, n_iters=n_iters, tol=0.0, seed=seed, mttkrp_fn=timed
     )
@@ -301,7 +318,11 @@ def measure_cp_als(
         steady = ts[1:] if len(ts) > 1 else ts
         flops = nbytes = None
         if cost_analysis:
-            flops, nbytes = mode_cost_analysis(tensor, rank, m, impl, backend=backend)
+            flops, nbytes = mode_cost_analysis(
+                tensor, rank, m, impl, backend=backend,
+                tile_nnz=tile_nnz, rows_per_block=rows_per_block,
+                ordering=ordering,
+            )
         modes.append(
             MeasuredMode(
                 mode=m,
@@ -604,6 +625,7 @@ class ExecutedTraceHitRates(HitRateCache):
             self.hits += 1
             return self._store[key]
         self.misses += 1
+        # repro: ignore[kwarg-threading] — input_traces= carries the executed run's ordering
         stats = executed_trace_stats(
             self.tensor,
             self.impl,

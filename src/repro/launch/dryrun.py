@@ -30,11 +30,9 @@ from repro.distributed.sharding import (
     batch_shardings,
     decode_state_shardings,
     param_shardings,
-    train_state_shardings,
 )
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_zoo import (
-    init_decode_state,
     init_model,
     input_specs,
     make_decode_fn,
@@ -100,7 +98,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, extra_tag: str = 
 
     n_ub = 1
     t0 = time.time()
-    import contextlib
 
     with mesh, layout_scope(layout):
         if spec.kind == "train":

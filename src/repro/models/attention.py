@@ -11,7 +11,6 @@ the lax.scan form is used in the portable dry-run path.)
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,6 @@ from repro.models.layers import (
     apply_rope,
     dense,
     head_shard,
-    init_dense,
     rope_frequencies,
 )
 

@@ -15,7 +15,6 @@ regardless of depth, which keeps 94-layer/32k-sequence lowering tractable.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

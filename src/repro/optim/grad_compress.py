@@ -14,7 +14,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 __all__ = ["Int8ErrorFeedback", "quantize_int8", "dequantize_int8"]
 

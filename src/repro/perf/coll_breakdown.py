@@ -77,13 +77,8 @@ def main():
     arch, shape = sys.argv[1], sys.argv[2]
     top_n = int(sys.argv[3]) if len(sys.argv) > 3 else 12
     # lower and grab HLO text via a one-off compile
-    import functools
 
-    import jax
-    import jax.numpy as jnp
 
-    from repro.configs import get_config
-    from repro.configs.shapes import SHAPES
 
     rec_holder = {}
     orig = dr.analyze_hlo

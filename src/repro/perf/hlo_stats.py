@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 __all__ = ["CollectiveStats", "collective_stats", "parse_hlo_collectives"]
 

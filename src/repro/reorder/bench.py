@@ -30,7 +30,6 @@ stack.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Mapping, Sequence
 
 from repro.core.hierarchy import PHOTONIC_IMC

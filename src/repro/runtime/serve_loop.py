@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model_zoo import init_decode_state, make_decode_fn
-from repro.models.transformer import forward
 
 __all__ = ["ServeConfig", "BatchServer"]
 

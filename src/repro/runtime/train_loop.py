@@ -17,7 +17,6 @@ deterministic data stream + failure handling:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax

@@ -1,0 +1,1 @@
+"""True-positive fixture for docs-citation (DESIGN.md §99 does not exist)."""

@@ -1,0 +1,1 @@
+"""True-negative fixture for docs-citation (DESIGN.md §1 resolves)."""

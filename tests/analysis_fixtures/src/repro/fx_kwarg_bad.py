@@ -1,0 +1,9 @@
+"""True-positive fixture for kwarg-threading: a knob accepted, not passed."""
+
+
+def inner(x, *, ordering=None, backend=None):
+    return (x, ordering, backend)
+
+
+def wrapper(x, *, ordering=None, backend=None):
+    return inner(x, backend=backend)  # drops ordering on the floor

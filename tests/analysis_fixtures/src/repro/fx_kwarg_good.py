@@ -1,0 +1,19 @@
+"""True-negative fixture for kwarg-threading: forwarded, splatted, derived."""
+
+
+def inner(x, *, ordering=None, backend=None):
+    return (x, ordering, backend)
+
+
+def wrapper(x, *, ordering=None, backend=None):
+    return inner(x, ordering=ordering, backend=backend)
+
+
+def wrapper_splat(x, *, ordering=None, **kwargs):
+    return inner(x, ordering=ordering, **kwargs)  # splat covers backend
+
+
+def wrapper_derived(x, *, ordering=None, backend=None):
+    resolved = backend or "compiled"
+    # the knob appears inside an argument expression — counts as threaded
+    return inner(x, ordering=ordering, backend=resolved if backend else None)

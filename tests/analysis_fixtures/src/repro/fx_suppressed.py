@@ -1,0 +1,10 @@
+"""Suppression fixture: a real finding waived in place with a reason."""
+
+
+def inner(x, *, ordering=None):
+    return (x, ordering)
+
+
+def wrapper(x, *, ordering=None):
+    # repro: ignore[kwarg-threading] — deliberate: exercises the waiver path
+    return inner(x)

@@ -1,0 +1,15 @@
+"""True-positive fixture for trace-safety: host syncs inside a jit body."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_fn(x):
+    y = jnp.sum(x)
+    if y > 0:  # Python branch on a traced value
+        y = y + 1
+    z = float(y)  # host conversion of a traced value
+    w = np.asarray(y)  # forced host materialization
+    return y.item() + z + w  # .item() sync

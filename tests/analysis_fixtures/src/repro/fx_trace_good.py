@@ -1,0 +1,19 @@
+"""True-negative fixture for trace-safety: every static-branch idiom."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def good_fn(x, *, flag=False):
+    y = jnp.sum(x)
+    if x.shape != (4,):  # metadata guard — static even under jit
+        raise ValueError("shape")
+    if flag:  # static_argnames parameter — concrete at trace time
+        y = y * 2
+    n = len(x.shape)
+    if n > 1:  # derived from metadata — stays static
+        y = y + 1
+    return jnp.where(y > 0, y, -y)  # traced select, not a Python branch

@@ -1,0 +1,20 @@
+"""True-positive fixture for pallas-kernel-contract: every rule broken."""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def bad_kernel(tile_block_ref, vals_ref, out_ref, acc_ref):
+    t = pl.program_id(0)
+    prev = tile_block_ref[t - 1]  # carried load, no t == 0 guard
+    nxt = tile_block_ref[t + 1]  # look-ahead load, no clamp
+    out_ref[...] = acc_ref[...] + prev + nxt  # store 1
+    total = out_ref[...]  # element read of the output ref
+    out_ref[0] = total  # store 2
+    out_ref[...] += vals_ref[...]  # read-modify-write
+
+
+def bad_alloc(rows, r_pad):
+    # dynamic shape element: a call is not resolvable at trace time
+    return pltpu.VMEM((rows, round(r_pad * 1.5)), jnp.float32)

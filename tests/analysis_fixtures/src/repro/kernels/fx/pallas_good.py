@@ -1,0 +1,30 @@
+"""True-negative fixture for pallas-kernel-contract: the shipped idiom."""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def good_kernel(tile_block_ref, vals_ref, out_ref, acc_ref):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    blk = tile_block_ref[t]
+    # carried load guarded by the short-circuiting t == 0 test
+    first = jnp.logical_or(t == 0, blk != tile_block_ref[t - 1])
+    # look-ahead load clamped inside the index
+    nxt = tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)]
+    last = jnp.logical_or(t == num_tiles - 1, blk != nxt)
+
+    @pl.when(first)
+    def _zero():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc_ref[...] += vals_ref[...]
+
+    @pl.when(last)
+    def _flush():
+        out_ref[...] = acc_ref[...]  # the single predicated store
+
+
+def good_alloc(rows, r_pad):
+    return pltpu.VMEM((rows, r_pad + 1), jnp.float32)

@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced config, one forward + train step on
 CPU, asserting output shapes and absence of NaNs (assignment requirement)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHITECTURES, get_config, reduced_config
-from repro.configs.shapes import SHAPES, ShapeSpec, applicable_shapes
+from repro.configs.shapes import ShapeSpec, applicable_shapes
 from repro.models.model_zoo import (
     init_decode_state,
     init_model,

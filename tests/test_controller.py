@@ -20,8 +20,7 @@ from repro.core.cache_sim import CacheConfig, simulate_trace, simulate_trace_fla
 from repro.core.hierarchy import fpga_hierarchy, hierarchy_mode_time
 from repro.core.memory_tech import E_SRAM, O_SRAM, PAPER_SYSTEM
 from repro.core.sparse_tensor import SparseTensor, random_sparse_tensor
-from repro.data.frostt import PAPER_RANK
-from repro.data.synthetic_tensors import make_frostt_like, scaled_characteristics
+from repro.data.synthetic_tensors import make_frostt_like
 from repro.dse.evaluator import exact_hit_rates_for_geometry
 from repro.experiments import CONTROLLER_RECON_TOL, reconcile_controller
 from repro.model import (

@@ -8,7 +8,6 @@ import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 _SRC = str(Path(__file__).resolve().parents[1] / "src")
 

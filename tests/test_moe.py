@@ -1,6 +1,5 @@
 """MoE dispatch correctness: one-hot capacity dispatch vs direct oracle."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

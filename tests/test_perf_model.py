@@ -5,9 +5,9 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core.accelerator import PAPER_ACCEL, mode_execution_time
+from repro.core.accelerator import mode_execution_time
 from repro.core.cache_sim import CacheConfig, che_hit_rate, simulate_trace
-from repro.core.memory_tech import E_SRAM, O_SRAM, PAPER_SYSTEM, SystemConstants
+from repro.core.memory_tech import E_SRAM, O_SRAM, PAPER_SYSTEM
 from repro.core.perf_model import (
     area_table,
     energy_constants,

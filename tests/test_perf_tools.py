@@ -5,8 +5,6 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # for `benchmarks`
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.perf.hlo_cost import analyze_hlo

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import reduced_config
 from repro.data.lm_data import SyntheticLMStream
 from repro.models.model_zoo import init_model
-from repro.optim.adamw import AdamW, global_norm, init_adamw_state
+from repro.optim.adamw import AdamW, init_adamw_state
 from repro.optim.grad_compress import Int8ErrorFeedback, dequantize_int8, quantize_int8
 from repro.optim.schedules import warmup_cosine
 from repro.runtime.checkpoint import (
