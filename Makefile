@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke controller controller-smoke analyze analyze-smoke lint
+.PHONY: test bench-smoke docs-check check experiments reorder cp-als serve serve-smoke autotune autotune-smoke controller controller-smoke analyze analyze-smoke analyze-diff lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -84,15 +84,24 @@ analyze:
 analyze-smoke:
 	$(PY) scripts/run_analysis.py --baseline analysis_baseline.json -q
 
+# Fast pre-push loop: analyze only the *.py files changed vs main (plus
+# untracked).  Cross-file checkers see a partial module set, so this
+# narrows the scan but never replaces the full `make analyze` gate.
+analyze-diff:
+	$(PY) scripts/run_analysis.py --baseline analysis_baseline.json \
+		--changed-vs main
+
 # Generic lint/typing (ruff + mypy, configured in pyproject.toml).
 # Both tools come from requirements-dev.txt; skip gracefully where they
 # are not installed so `make lint` never fails on a runtime-only box.
+# repro.analysis is in the strict set: CI blocks on it (the analysis
+# framework must itself be type-clean).
 lint:
 	@$(PY) -c "import ruff" 2>/dev/null \
 		&& $(PY) -m ruff check src scripts benchmarks examples tests \
 		|| echo "lint: ruff not installed, skipping (pip install -r requirements-dev.txt)"
 	@$(PY) -c "import mypy" 2>/dev/null \
-		&& $(PY) -m mypy src/repro/core src/repro/dse \
+		&& $(PY) -m mypy src/repro/core src/repro/dse src/repro/analysis \
 		|| echo "lint: mypy not installed, skipping (pip install -r requirements-dev.txt)"
 
 check: docs-check analyze lint test

@@ -7,6 +7,8 @@ Usage:
     python scripts/run_analysis.py --checks trace-safety,memo-key-completeness
     python scripts/run_analysis.py --write-baseline analysis_baseline.json
     python scripts/run_analysis.py --baseline analysis_baseline.json
+    python scripts/run_analysis.py --baseline analysis_baseline.json --prune-baseline
+    python scripts/run_analysis.py --changed-vs main   # fast pre-push loop
 
 Exit status (the CI contract, DESIGN.md §15):
   0  no active findings, or every active finding's fingerprint is in the
@@ -23,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
@@ -30,12 +33,38 @@ REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
 
 from repro.analysis import run_analysis  # noqa: E402
-from repro.analysis.core import DEFAULT_SCAN_DIRS  # noqa: E402
+from repro.analysis.core import DEFAULT_SCAN_DIRS, SourceFile  # noqa: E402
 
 
 def _load_baseline(path: Path) -> set[tuple[str, str, str]]:
     data = json.loads(path.read_text())
     return {tuple(fp) for fp in data.get("fingerprints", [])}
+
+
+def _changed_files(root: Path, ref: str, dirs: tuple[str, ...]) -> list[SourceFile]:
+    """Parse only the ``*.py`` files changed vs ``ref`` (plus untracked).
+
+    The fast pre-push loop (``make analyze-diff``): cross-file checkers
+    see a partial module set, so this narrows but never replaces the
+    full gate.
+    """
+    diff = subprocess.run(
+        ["git", "diff", "--name-only", ref, "--", "*.py"],
+        cwd=root, capture_output=True, text=True, check=True,
+    ).stdout.splitlines()
+    untracked = subprocess.run(
+        ["git", "ls-files", "--others", "--exclude-standard", "*.py"],
+        cwd=root, capture_output=True, text=True, check=True,
+    ).stdout.splitlines()
+    out: list[SourceFile] = []
+    for rel in sorted(set(diff) | set(untracked)):
+        path = root / rel
+        if not path.exists():
+            continue  # deleted in the diff
+        if not any(rel == d or rel.startswith(d + "/") for d in dirs):
+            continue
+        out.append(SourceFile(path, root))
+    return out
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -51,13 +80,32 @@ def main(argv: list[str] | None = None) -> int:
         "--write-baseline", type=Path,
         help="record current active findings as the new baseline and exit 0",
     )
+    ap.add_argument(
+        "--prune-baseline", action="store_true",
+        help="rewrite --baseline dropping fingerprints no finding matches "
+             "(the STALE entries) and exit 0",
+    )
+    ap.add_argument(
+        "--changed-vs", metavar="REF",
+        help="scan only *.py files changed vs the given git ref (plus "
+             "untracked) — the fast pre-push loop; cross-file checkers "
+             "see a partial module set, so the full run remains the gate",
+    )
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
+
+    dirs = tuple(args.dirs.split(",")) if args.dirs else DEFAULT_SCAN_DIRS
+    files = _changed_files(args.root, args.changed_vs, dirs) \
+        if args.changed_vs else None
+    if files is not None and not args.quiet:
+        print(f"repro.analysis: {len(files)} file(s) changed vs "
+              f"{args.changed_vs}")
 
     report = run_analysis(
         args.root,
         checks=args.checks.split(",") if args.checks else None,
-        dirs=tuple(args.dirs.split(",")) if args.dirs else DEFAULT_SCAN_DIRS,
+        dirs=dirs,
+        files=files,
     )
 
     if args.json:
@@ -80,6 +128,25 @@ def main(argv: list[str] | None = None) -> int:
     known = _load_baseline(args.baseline) if args.baseline and args.baseline.exists() else set()
     new = [f for f in report.active if f.fingerprint not in known]
     stale = known - {f.fingerprint for f in report.active}
+
+    if args.prune_baseline:
+        if not args.baseline:
+            print("--prune-baseline requires --baseline", file=sys.stderr)
+            return 2
+        kept = sorted(known - stale)
+        args.baseline.write_text(
+            json.dumps(
+                {
+                    "schema": "repro.analysis.baseline/v1",
+                    "fingerprints": [list(fp) for fp in kept],
+                },
+                indent=2,
+            )
+            + "\n"
+        )
+        print(f"baseline: pruned {len(stale)} stale entr(y/ies), "
+              f"kept {len(kept)} -> {args.baseline}")
+        return 0
 
     if not args.quiet:
         print(f"repro.analysis: {report.files_scanned} files, "

@@ -8,9 +8,12 @@ add fixtures under ``tests/analysis_fixtures/`` (DESIGN.md §15).
 
 from repro.analysis.checkers import (  # noqa: F401
     docs_citation,
+    grid_carry_init,
     kwarg_threading,
     memo_keys,
     pallas_contract,
     shared_state,
+    stale_suppression,
     trace_safety,
+    traffic_drift,
 )

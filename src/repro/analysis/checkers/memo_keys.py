@@ -87,7 +87,9 @@ class MemoKeyCompleteness(Checker):
         audited_classes: list[str] = []
         audited_builders: list[str] = []
         audited_caches: list[str] = []
-        for sf in ctx.under("src/"):
+        # src/ plus (PR 10) tests/ — memo keys built by test helpers obey
+        # the same completeness contract; analysis_fixtures stay waived.
+        for sf in ctx.scannable("src/", "tests/"):
             for node in ast.walk(sf.tree):
                 if isinstance(node, ast.ClassDef):
                     self._check_class(sf, node, audited_classes)

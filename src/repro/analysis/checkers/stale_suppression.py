@@ -1,0 +1,57 @@
+"""stale-suppression: ``# repro: ignore[...]`` must suppress something.
+
+A suppression comment is a standing claim — "this line violates
+check X, intentionally".  When the underlying code is fixed or the
+checker sharpened, the comment outlives the finding and starts lying:
+readers believe a contract is being violated where none is, and a NEW
+violation introduced on that line later is silently absorbed by the
+leftover comment.  This audit runs after every other selected checker
+(``run_analysis`` orders it last) and flags each suppression entry that
+matched no emitted finding this run.
+
+Judgment is per check id and only for ids whose checker actually ran
+(``ctx.checks_run``): a run restricted to ``--checks trace-safety``
+must not condemn a ``kwarg-threading`` suppression it never exercised.
+Fixture files are exempt — they violate contracts on purpose.  The
+finding is itself suppressable (``# repro: ignore[stale-suppression]``)
+for deliberately-kept tombstones.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.core import AnalysisContext, Checker, register
+
+
+@register
+class StaleSuppression(Checker):
+    check_id = "stale-suppression"
+    description = (
+        "Every `# repro: ignore[check-id]` comment suppresses at least "
+        "one finding of a checker that ran (audited last, per entry)"
+    )
+
+    def run(self, ctx: AnalysisContext) -> None:
+        audited = 0
+        stale = 0
+        for sf in ctx.scannable():
+            for lineno in sorted(sf.suppressions):
+                for check_id in sorted(sf.suppressions[lineno]):
+                    if check_id == self.check_id:
+                        continue  # the audit's own tombstone marker
+                    if check_id not in ctx.checks_run:
+                        continue  # checker not exercised this run
+                    audited += 1
+                    # used_suppressions records the *comment's* line (the
+                    # Checker.emit -> match_suppression contract).
+                    if (lineno, check_id) in sf.used_suppressions:
+                        continue
+                    stale += 1
+                    self.emit(
+                        sf, lineno,
+                        f"suppression `repro: ignore[{check_id}]` matched "
+                        "no finding this run — the violation it excused is "
+                        "gone; delete the comment (or it will silently "
+                        "absorb the next real finding on this line)",
+                    )
+        self.facts["suppressions_audited"] = audited
+        self.facts["stale"] = stale

@@ -38,6 +38,8 @@ import ast
 from repro.analysis.core import (
     AnalysisContext,
     Checker,
+    FunctionIndex,
+    FunctionInfo,
     SourceFile,
     call_name,
     dotted_name,
@@ -80,45 +82,6 @@ HOST_CONVERSIONS = {"float", "int", "bool", "complex"}
 NUMPY_SYNC_CALLS = {"asarray", "array", "copy"}
 
 
-def _partial_target(node: ast.AST) -> str | None:
-    """``functools.partial(f, ...)`` -> ``f``'s dotted name."""
-    if isinstance(node, ast.Call):
-        name = call_name(node) or ""
-        if name in ("functools.partial", "partial") and node.args:
-            from repro.analysis.core import dotted_name
-
-            return dotted_name(node.args[0])
-    return None
-
-
-class _FnInfo:
-    def __init__(self, node: ast.FunctionDef, qualname: str, cls: str | None):
-        self.node = node
-        self.qualname = qualname
-        self.cls = cls  # enclosing class name, if a method
-        self.calls: set[str] = set()  # local names / self-methods called
-        self.traced_root = False
-
-
-def _index_functions(sf: SourceFile) -> dict[ast.AST, _FnInfo]:
-    """Every function in the module with its enclosing class (if any)."""
-    infos: dict[ast.AST, _FnInfo] = {}
-
-    def visit(node: ast.AST, cls: str | None, prefix: str) -> None:
-        for child in ast.iter_child_nodes(node):
-            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
-                qual = f"{prefix}{child.name}"
-                infos[child] = _FnInfo(child, qual, cls)
-                visit(child, cls, f"{qual}.")
-            elif isinstance(child, ast.ClassDef):
-                visit(child, child.name, f"{prefix}{child.name}.")
-            else:
-                visit(child, cls, prefix)
-
-    visit(sf.tree, None, "")
-    return infos
-
-
 @register
 class TraceSafety(Checker):
     check_id = "trace-safety"
@@ -130,24 +93,19 @@ class TraceSafety(Checker):
 
     def run(self, ctx: AnalysisContext) -> None:
         reachable_total = 0
-        for sf in ctx.under("src/"):
+        # src/ plus (PR 10) tests/ — test helpers that jit/scan are held
+        # to the same contract; analysis_fixtures stay waived.
+        for sf in ctx.scannable("src/", "tests/"):
             reachable_total += self._check_module(sf)
         self.facts["traced_functions"] = reachable_total
 
     def _check_module(self, sf: SourceFile) -> int:
-        infos = _index_functions(sf)
-        by_name: dict[str, list[_FnInfo]] = {}
-        for info in infos.values():
-            by_name.setdefault(info.node.name, []).append(info)
-
-        # functools.partial aliases: alias name -> underlying function name
-        aliases: dict[str, str] = {}
-        for node in ast.walk(sf.tree):
-            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
-                    isinstance(node.targets[0], ast.Name):
-                target = _partial_target(node.value)
-                if target:
-                    aliases[node.targets[0].id] = target.rsplit(".", 1)[-1]
+        # The module callgraph (function index, partial aliases, local /
+        # self call edges) comes from the shared dataflow layer.
+        index = FunctionIndex(sf)
+        infos = index.infos
+        by_name = index.by_name
+        aliases = index.aliases
 
         def mark_root(name: str) -> None:
             name = aliases.get(name, name)
@@ -194,24 +152,7 @@ class TraceSafety(Checker):
                     for called in names_in(a.body):
                         mark_root(called)
 
-        # Call edges: local function names and self.<method>.
-        for info in infos.values():
-            for node in ast.walk(info.node):
-                if not isinstance(node, ast.Call):
-                    continue
-                if isinstance(node.func, ast.Name):
-                    callee = aliases.get(node.func.id, node.func.id)
-                    if callee in by_name:
-                        info.calls.add(callee)
-                elif (
-                    isinstance(node.func, ast.Attribute)
-                    and isinstance(node.func.value, ast.Name)
-                    and node.func.value.id == "self"
-                    and node.func.attr in by_name
-                ):
-                    info.calls.add(node.func.attr)
-
-        # Propagate reachability to a fixpoint.
+        # Propagate reachability to a fixpoint (call edges from the index).
         changed = True
         while changed:
             changed = False
@@ -294,7 +235,7 @@ class TraceSafety(Checker):
                             changed = True
         return traced
 
-    def _check_traced_fn(self, sf: SourceFile, info: _FnInfo) -> None:
+    def _check_traced_fn(self, sf: SourceFile, info: FunctionInfo) -> None:
         fn = info.node
         traced = self._traced_locals(fn)
 

@@ -30,28 +30,48 @@ from __future__ import annotations
 
 import ast
 import dataclasses
+import io
 import json
 import re
+import tokenize
 from pathlib import Path
-from typing import Callable, Iterable, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 __all__ = [
     "AnalysisContext",
     "Checker",
     "Finding",
+    "FunctionIndex",
+    "FunctionInfo",
     "REGISTRY",
     "Report",
     "SourceFile",
     "default_checkers",
+    "import_bindings",
+    "reaching_def",
     "register",
     "run_analysis",
+    "straightline_defs",
 ]
 
 #: ``# repro: ignore[check-id]`` (one or more comma-separated ids).
 SUPPRESS_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Za-z0-9_,\- ]+)\]")
 
-#: Directories scanned by default, relative to the repo root.
-DEFAULT_SCAN_DIRS = ("src", "scripts", "benchmarks", "examples")
+#: Directories scanned by default, relative to the repo root.  ``tests``
+#: joined in PR 10 so the trace-safety / memo-key / citation contracts
+#: cover test helpers too; intentional violations under
+#: ``tests/analysis_fixtures/`` are waived via :data:`FIXTURE_PATH_PART`.
+DEFAULT_SCAN_DIRS = ("src", "scripts", "benchmarks", "examples", "tests")
+
+#: Path fragment identifying the checker fixture mini-repo: files under
+#: it deliberately violate contracts and are excluded from every
+#: repo-level scan (each checker consults :func:`is_fixture_path`).
+FIXTURE_PATH_PART = "analysis_fixtures"
+
+
+def is_fixture_path(path: str) -> bool:
+    """True for intentional-violation fixtures (the shared waiver list)."""
+    return FIXTURE_PATH_PART in path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,11 +114,20 @@ class SourceFile:
         self._parents: dict[ast.AST, ast.AST] | None = None
         # line -> suppressed check ids on that line
         self.suppressions: dict[int, set[str]] = {}
-        for lineno, line in enumerate(self.lines, start=1):
-            m = SUPPRESS_RE.search(line)
+        # (suppression line, check id) pairs that matched an emitted
+        # finding this run — the stale-suppression audit's evidence.
+        self.used_suppressions: set[tuple[int, str]] = set()
+        # Tokenize so only REAL comments suppress: the syntax quoted in a
+        # docstring (checker documentation does this) must not enter the
+        # table — a prose mention would silently absorb findings on its
+        # line, and the stale-suppression audit would flag it forever.
+        for tok in tokenize.generate_tokens(io.StringIO(self.text).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = SUPPRESS_RE.search(tok.string)
             if m:
                 ids = {c.strip() for c in m.group(1).split(",") if c.strip()}
-                self.suppressions.setdefault(lineno, set()).update(ids)
+                self.suppressions.setdefault(tok.start[0], set()).update(ids)
 
     @property
     def module(self) -> str:
@@ -109,12 +138,17 @@ class SourceFile:
         name = ".".join(parts)
         return name[: -len(".__init__")] if name.endswith(".__init__") else name
 
+    def match_suppression(self, line: int, check_id: str) -> int | None:
+        """The suppression line covering ``line`` for ``check_id``: the
+        finding's own line or the standalone line above.  Exact id only."""
+        for ln in (line, line - 1):
+            if check_id in self.suppressions.get(ln, ()):
+                return ln
+        return None
+
     def is_suppressed(self, line: int, check_id: str) -> bool:
         """Suppressed on the finding's line or the standalone line above."""
-        for ln in (line, line - 1):
-            if check_id in self.suppressions.get(ln, ()):  # exact id only
-                return True
-        return False
+        return self.match_suppression(line, check_id) is not None
 
     def parent(self, node: ast.AST) -> ast.AST | None:
         if self._parents is None:
@@ -138,6 +172,10 @@ class AnalysisContext:
         self.root = Path(root)
         self.files = list(files)
         self._by_path = {f.path: f for f in self.files}
+        # check ids selected for this run; set by run_analysis before any
+        # checker executes (the stale-suppression audit only judges
+        # suppressions whose checker actually ran).
+        self.checks_run: set[str] = set()
 
     def file(self, path: str) -> SourceFile | None:
         return self._by_path.get(path)
@@ -145,6 +183,17 @@ class AnalysisContext:
     def under(self, prefix: str) -> list[SourceFile]:
         """Files whose repo-relative path starts with ``prefix``."""
         return [f for f in self.files if f.path.startswith(prefix)]
+
+    def scannable(self, *prefixes: str) -> list[SourceFile]:
+        """Files under any of ``prefixes`` (all files if none given),
+        minus the intentional-violation fixtures."""
+        out = []
+        for f in self.files:
+            if is_fixture_path(f.path):
+                continue
+            if not prefixes or any(f.path.startswith(p) for p in prefixes):
+                out.append(f)
+        return out
 
 
 class Checker:
@@ -162,12 +211,15 @@ class Checker:
 
     def emit(self, sf: SourceFile, node: ast.AST | int, message: str) -> Finding:
         line = node if isinstance(node, int) else getattr(node, "lineno", 1)
+        sline = sf.match_suppression(line, self.check_id)
+        if sline is not None:
+            sf.used_suppressions.add((sline, self.check_id))
         f = Finding(
             check_id=self.check_id,
             path=sf.path,
             line=line,
             message=message,
-            suppressed=sf.is_suppressed(line, self.check_id),
+            suppressed=sline is not None,
         )
         self.findings.append(f)
         return f
@@ -236,7 +288,7 @@ class Report:
             "facts": self.facts,
         }
 
-    def to_json(self, **kwargs) -> str:
+    def to_json(self, **kwargs: Any) -> str:
         kwargs.setdefault("indent", 2)
         kwargs.setdefault("sort_keys", True)
         return json.dumps(self.to_dict(), **kwargs)
@@ -282,7 +334,12 @@ def run_analysis(
             raise ValueError(
                 f"unknown check ids {unknown}; registered: {sorted(REGISTRY)}"
             )
+    # The stale-suppression audit judges which suppressions the OTHER
+    # checkers matched, so it must run after all of them.
+    if "stale-suppression" in ids:
+        ids = [c for c in ids if c != "stale-suppression"] + ["stale-suppression"]
     ctx = AnalysisContext(root, collect_files(root, dirs) if files is None else files)
+    ctx.checks_run = set(ids)
 
     checker_rows: list[dict] = []
     findings: list[Finding] = []
@@ -339,3 +396,141 @@ def names_in(node: ast.AST) -> set[str]:
         for n in ast.walk(node)
         if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
     }
+
+
+# --------------------------------------------------------------------------
+# Dataflow layer (DESIGN.md §15): per-module function index + callgraph,
+# import bindings, and straight-line reaching definitions.  Shared by the
+# trace-safety reachability pass, the traffic interpreter
+# (repro.analysis.traffic), and the grid-carry-init checker.
+# --------------------------------------------------------------------------
+
+
+def partial_target(node: ast.AST) -> str | None:
+    """``functools.partial(f, ...)`` -> ``f``'s dotted name, else None."""
+    if isinstance(node, ast.Call):
+        name = call_name(node) or ""
+        if name in ("functools.partial", "partial") and node.args:
+            return dotted_name(node.args[0])
+    return None
+
+
+class FunctionInfo:
+    """One function in a module: AST node, qualified name, enclosing
+    class (if a method), and the local/self call edges out of it."""
+
+    def __init__(
+        self, node: ast.FunctionDef | ast.AsyncFunctionDef,
+        qualname: str, cls: str | None,
+    ) -> None:
+        self.node = node
+        self.qualname = qualname
+        self.cls = cls
+        self.calls: set[str] = set()  # resolved local names / self-methods
+        self.traced_root = False  # used by the trace-safety reachability pass
+
+
+class FunctionIndex:
+    """Per-module def-use skeleton: every function with its call edges
+    (local names, ``self.<method>``, and ``functools.partial`` aliases
+    resolved).  This is the callgraph PR 9's trace-safety checker built
+    inline, factored out so the traffic interpreter and the
+    flow-sensitive checkers resolve callees the same way."""
+
+    def __init__(self, sf: SourceFile) -> None:
+        self.sf = sf
+        self.infos: dict[ast.AST, FunctionInfo] = {}
+        self.by_name: dict[str, list[FunctionInfo]] = {}
+        self.aliases: dict[str, str] = {}  # partial alias -> target last name
+
+        def visit(node: ast.AST, cls: str | None, prefix: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    self.infos[child] = FunctionInfo(child, qual, cls)
+                    visit(child, cls, f"{qual}.")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, child.name, f"{prefix}{child.name}.")
+                else:
+                    visit(child, cls, prefix)
+
+        visit(sf.tree, None, "")
+        for info in self.infos.values():
+            self.by_name.setdefault(info.node.name, []).append(info)
+
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                target = partial_target(node.value)
+                if target:
+                    self.aliases[node.targets[0].id] = target.rsplit(".", 1)[-1]
+
+        for info in self.infos.values():
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if isinstance(node.func, ast.Name):
+                    callee = self.aliases.get(node.func.id, node.func.id)
+                    if callee in self.by_name:
+                        info.calls.add(callee)
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in self.by_name
+                ):
+                    info.calls.add(node.func.attr)
+
+    def resolve(self, name: str) -> FunctionInfo | None:
+        """The unique module-level function of ``name`` (through partial
+        aliases), or None when absent/ambiguous."""
+        cands = self.by_name.get(self.aliases.get(name, name), [])
+        return cands[0] if len(cands) == 1 else None
+
+
+def import_bindings(sf: SourceFile) -> dict[str, str]:
+    """Local name -> dotted origin for every top-level import.
+
+    ``from a.b import c as d`` binds ``d -> a.b.c``; ``import a.b as c``
+    binds ``c -> a.b``.  Cross-module edges in the traffic interpreter
+    resolve wrapper->kernel calls through this table."""
+    out: dict[str, str] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def straightline_defs(
+    fn: ast.FunctionDef | ast.AsyncFunctionDef,
+) -> dict[str, list[ast.expr]]:
+    """Name -> assigned value expressions, in source order, for the
+    single-assignment-style straight-line code the kernels are written
+    in.  Tuple unpacking records the whole RHS for each target name."""
+    defs: dict[str, list[ast.expr]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        defs.setdefault(n.id, []).append(node.value)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)) and \
+                node.value is not None and isinstance(node.target, ast.Name):
+            defs.setdefault(node.target.id, []).append(node.value)
+    return defs
+
+
+def reaching_def(
+    fn: ast.FunctionDef | ast.AsyncFunctionDef, name: str,
+    defs: dict[str, list[ast.expr]] | None = None,
+) -> ast.expr | None:
+    """The unique reaching definition of ``name`` in ``fn`` — the value
+    expression when the name is assigned exactly once (the predicate
+    classifier's soundness condition), else None."""
+    defs = straightline_defs(fn) if defs is None else defs
+    exprs = defs.get(name, [])
+    return exprs[0] if len(exprs) == 1 else None

@@ -1,0 +1,208 @@
+"""Exact Laurent-polynomial abstract domain for the traffic interpreter.
+
+The symbolic traffic census (DESIGN.md §15) counts loads and stores as
+polynomials over the kernel geometry symbols — ``tile_nnz``,
+``rows_per_block``, ``rank``, ``nnz``, ``I_mode``, ``n_inputs`` plus the
+derived quantities ``num_tiles``/``num_blocks``/``nnz_pad``/
+``num_chunks``/``nnz_chunk``.  Negative exponents are allowed (Laurent):
+``num_tiles = nnz_pad // tile_nnz`` becomes ``nnz_pad · tile_nnz⁻¹``
+exactly, because the plan guarantees divisibility (the kernel raises on
+a non-multiple).  Coefficients are :class:`fractions.Fraction`, so every
+comparison the traffic-model-drift gate makes is exact — zero ULPs of
+slack, zero discrepancy tolerated.
+"""
+
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Iterable, Mapping, Union
+
+__all__ = ["Poly", "poly_sum"]
+
+#: One monomial: sorted ((var, exponent), ...) with nonzero exponents.
+Monomial = tuple[tuple[str, int], ...]
+
+Scalar = Union[int, Fraction]
+
+
+def _mono_mul(a: Monomial, b: Monomial) -> Monomial:
+    exps: dict[str, int] = dict(a)
+    for var, e in b:
+        exps[var] = exps.get(var, 0) + e
+        if exps[var] == 0:
+            del exps[var]
+    return tuple(sorted(exps.items()))
+
+
+def _mono_pow(m: Monomial, n: int) -> Monomial:
+    return tuple((var, e * n) for var, e in m)
+
+
+class Poly:
+    """An immutable Laurent polynomial with Fraction coefficients."""
+
+    __slots__ = ("terms",)
+
+    def __init__(self, terms: Mapping[Monomial, Scalar] | None = None) -> None:
+        clean: dict[Monomial, Fraction] = {}
+        for mono, coeff in (terms or {}).items():
+            c = Fraction(coeff)
+            if c:
+                clean[mono] = c
+        self.terms: dict[Monomial, Fraction] = clean
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def const(cls, c: Scalar) -> "Poly":
+        return cls({(): Fraction(c)})
+
+    @classmethod
+    def var(cls, name: str) -> "Poly":
+        return cls({((name, 1),): Fraction(1)})
+
+    @classmethod
+    def coerce(cls, x: "Poly | Scalar") -> "Poly":
+        return x if isinstance(x, Poly) else cls.const(x)
+
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def is_zero(self) -> bool:
+        return not self.terms
+
+    def variables(self) -> set[str]:
+        return {var for mono in self.terms for var, _ in mono}
+
+    def as_constant(self) -> Fraction | None:
+        """The value when constant (including zero), else None."""
+        if not self.terms:
+            return Fraction(0)
+        if len(self.terms) == 1 and () in self.terms:
+            return self.terms[()]
+        return None
+
+    # -- arithmetic --------------------------------------------------------
+
+    def __add__(self, other: "Poly | Scalar") -> "Poly":
+        other = Poly.coerce(other)
+        out = dict(self.terms)
+        for mono, c in other.terms.items():
+            out[mono] = out.get(mono, Fraction(0)) + c
+        return Poly(out)
+
+    __radd__ = __add__
+
+    def __neg__(self) -> "Poly":
+        return Poly({m: -c for m, c in self.terms.items()})
+
+    def __sub__(self, other: "Poly | Scalar") -> "Poly":
+        return self + (-Poly.coerce(other))
+
+    def __rsub__(self, other: "Poly | Scalar") -> "Poly":
+        return Poly.coerce(other) + (-self)
+
+    def __mul__(self, other: "Poly | Scalar") -> "Poly":
+        other = Poly.coerce(other)
+        out: dict[Monomial, Fraction] = {}
+        for m1, c1 in self.terms.items():
+            for m2, c2 in other.terms.items():
+                m = _mono_mul(m1, m2)
+                out[m] = out.get(m, Fraction(0)) + c1 * c2
+        return Poly(out)
+
+    __rmul__ = __mul__
+
+    def inverse(self) -> "Poly":
+        """Multiplicative inverse — defined for single-term polynomials
+        only (the exact-division case the plan geometry guarantees)."""
+        if len(self.terms) != 1:
+            raise ValueError(f"cannot invert multi-term polynomial {self}")
+        ((mono, coeff),) = self.terms.items()
+        return Poly({_mono_pow(mono, -1): Fraction(1) / coeff})
+
+    def __truediv__(self, other: "Poly | Scalar") -> "Poly":
+        return self * Poly.coerce(other).inverse()
+
+    def __pow__(self, n: int) -> "Poly":
+        if not isinstance(n, int):
+            raise TypeError(f"exponent must be int, got {n!r}")
+        if n < 0:
+            return self.inverse() ** (-n)
+        out = Poly.const(1)
+        for _ in range(n):
+            out = out * self
+        return out
+
+    # -- substitution / evaluation ----------------------------------------
+
+    def subs(self, mapping: Mapping[str, "Poly | Scalar"]) -> "Poly":
+        """Substitute variables; unmapped variables pass through.
+        Negative exponents require the substituted value to be a single
+        term (exact inversion)."""
+        out = Poly()
+        for mono, coeff in self.terms.items():
+            term = Poly.const(coeff)
+            for var, exp in mono:
+                base = Poly.coerce(mapping[var]) if var in mapping \
+                    else Poly.var(var)
+                term = term * (base ** exp)
+            out = out + term
+        return out
+
+    def evaluate(self, env: Mapping[str, Scalar]) -> Fraction:
+        """Exact value under a full concrete assignment."""
+        total = Fraction(0)
+        for mono, coeff in self.terms.items():
+            val = coeff
+            for var, exp in mono:
+                if var not in env:
+                    raise KeyError(
+                        f"no value for {var!r} evaluating {self}"
+                    )
+                val *= Fraction(env[var]) ** exp
+            total += val
+        return total
+
+    # -- identity ----------------------------------------------------------
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, (int, Fraction)):
+            other = Poly.const(other)
+        if not isinstance(other, Poly):
+            return NotImplemented
+        return self.terms == other.terms
+
+    def __hash__(self) -> int:
+        return hash(frozenset(self.terms.items()))
+
+    # -- formatting --------------------------------------------------------
+
+    @staticmethod
+    def _fmt_coeff(c: Fraction) -> str:
+        return str(c.numerator) if c.denominator == 1 else f"{c}"
+
+    def __str__(self) -> str:
+        if not self.terms:
+            return "0"
+        parts = []
+        for mono in sorted(self.terms, key=lambda m: (len(m), m)):
+            coeff = self.terms[mono]
+            factors: list[str] = []
+            if not mono or coeff != 1:
+                factors.append(self._fmt_coeff(coeff))
+            for var, exp in mono:
+                factors.append(var if exp == 1 else f"{var}**{exp}")
+            parts.append("*".join(factors))
+        return " + ".join(parts)
+
+    def __repr__(self) -> str:
+        return f"Poly({self})"
+
+
+def poly_sum(polys: Iterable[Poly]) -> Poly:
+    """Sum of an iterable of polynomials (empty -> 0)."""
+    out = Poly()
+    for p in polys:
+        out = out + p
+    return out

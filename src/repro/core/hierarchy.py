@@ -55,6 +55,8 @@ if TYPE_CHECKING:  # AcceleratorConfig lives above this module; duck-typed here.
     from repro.data.frostt import FrosttTensor
 
 __all__ = [
+    "PSUM_ACCESSES_PER_NNZ",
+    "analytic_traffic_census",
     "CacheGeometry",
     "PortModel",
     "SwitchingModel",
@@ -494,6 +496,42 @@ def split_capacity_hit_rates(
     return tuple(hits)
 
 
+#: Partial-sum accesses per nonzero: one read + one write of the output
+#: accumulator row (the §IV switching term's RMW pair).  The symbolic
+#: traffic interpreter (repro.analysis.traffic) proves the XLA kernel's
+#: ``acc.at[rows].add`` performs exactly this many accumulator accesses
+#: per nonzero; the ``traffic-model-drift`` checker pins the two against
+#: each other.
+PSUM_ACCESSES_PER_NNZ = 2
+
+
+def analytic_traffic_census(nmodes: int) -> dict[str, int]:
+    """The per-nonzero element counts the performance model is built on.
+
+    These are the coefficients behind ``_traffic_terms`` and
+    ``propagate_traffic`` — stated as counts (not bytes) so the static
+    traffic interpreter can compare them term-for-term against the
+    closed forms it extracts from the kernel ASTs:
+
+    * ``values_per_nnz`` — the nonzero's value, streamed once;
+    * ``indices_per_nnz`` — one coordinate per tensor mode (the §IV-A
+      stream term is ``value_bytes + nmodes · index_bytes``);
+    * ``factor_rows_per_nnz`` — one row per input factor (``N−1``), the
+      request count arriving at the top caching level;
+    * ``output_rows_amortized`` — output traffic is ``I_mode · rank``
+      elements total, i.e. amortized (not per-nonzero);
+    * ``psum_accesses_per_nnz`` — the accumulator RMW pair.
+    """
+    n_inputs = max(1, nmodes - 1)
+    return {
+        "values_per_nnz": 1,
+        "indices_per_nnz": nmodes,
+        "factor_rows_per_nnz": n_inputs,
+        "output_rows_amortized": 1,
+        "psum_accesses_per_nnz": PSUM_ACCESSES_PER_NNZ,
+    }
+
+
 def _traffic_terms(
     tensor: "FrosttTensor",
     mode: int,
@@ -778,7 +816,7 @@ def _fpga_mode_times_batch(
     seconds = nnz / (rate * f)
 
     # Partial-sum RMW and the nonzero stream switch bits once, at the top.
-    psum_bits = 2 * ranks * 32
+    psum_bits = PSUM_ACCESSES_PER_NNZ * ranks * 32
     stream_bits = stream_b * 8
     switched_per_nnz = switched + psum_bits + stream_bits
 
@@ -837,7 +875,7 @@ def _roofline_mode_times_batch(
             # RMW (2 output-row slices per nonzero) lives at the TOP level
             # only — it never traverses deeper caching levels.
             if k == 0:
-                psum = 2 * ranks * np.array(
+                psum = PSUM_ACCESSES_PER_NNZ * ranks * np.array(
                     [h.value_bytes for h in hiers], dtype=np.int64
                 )
                 level_bytes = (requests * gran + psum) * nnz

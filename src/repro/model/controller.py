@@ -70,6 +70,7 @@ import numpy as np
 from repro.core.accelerator import PAPER_ACCEL, AcceleratorConfig
 from repro.core.cache_sim import simulate_trace_flags
 from repro.core.hierarchy import (
+    PSUM_ACCESSES_PER_NNZ,
     MemoryHierarchy,
     MemoryLevel,
     ModeTime,
@@ -87,6 +88,7 @@ __all__ = [
     "bank_conflict_counts",
     "calibration_controller",
     "paper_controller",
+    "request_stream_lengths",
     "request_streams",
     "simulate_controller",
     "simulate_controller_mode",
@@ -255,6 +257,25 @@ def request_streams(
         for k in range(tensor.nmodes)
         if k != mode
     ]
+
+
+def request_stream_lengths(
+    tensor: SparseTensor, mode: int, *, ordering: str = "lex"
+) -> dict[int, int]:
+    """Input mode -> executed request-stream length for one MTTKRP mode.
+
+    Every ordering is a permutation of the nonzeros, so each input's
+    stream carries exactly one factor-row request per nonzero — the
+    ``factor_rows_per_nnz`` coefficient of
+    ``repro.core.hierarchy.analytic_traffic_census``.  Stated as its own
+    function (rather than an invariant buried in the simulator) so the
+    static ``traffic-model-drift`` gate can replay it against the
+    symbolic census extracted from the kernel ASTs.
+    """
+    return {
+        k: int(stream.shape[0])
+        for k, stream in request_streams(tensor, mode, ordering=ordering)
+    }
 
 
 def _controller_level(hier: MemoryHierarchy) -> MemoryLevel:
@@ -493,7 +514,7 @@ def _switched_bytes(
             switched_bits = (
                 sm.associativity * (line_bits + sm.tag_bits) + sm.lru_bits
             ) * hits.size + 2 * line_bits * n_miss
-    psum_bits = 2 * rank * 32 * nnz
+    psum_bits = PSUM_ACCESSES_PER_NNZ * rank * 32 * nnz
     stream_bits = stream_bytes * 8 * nnz
     return float((switched_bits + psum_bits + stream_bits) / 8.0)
 

@@ -1,0 +1,15 @@
+"""True-positive fixture for stale-suppression: a waiver outliving its bug.
+
+``run`` forwards ``ordering`` correctly, so kwarg-threading has nothing
+to report here — the suppression comment matches no finding and must be
+flagged as stale (left in place it would silently absorb the NEXT real
+finding on its line).
+"""
+
+
+def run(plan, *, ordering="lex"):
+    return helper(plan, ordering=ordering)  # repro: ignore[kwarg-threading]
+
+
+def helper(plan, *, ordering="lex"):
+    return (plan, ordering)

@@ -1,0 +1,92 @@
+"""True-positive fixture for grid-carry-init: scratch read before init.
+
+Two complete scalar-prefetch streaming programs (the traffic
+interpreter only censuses full wrapper+kernel programs), each with a
+distinct grid-carry bug:
+
+  * ``uninit_call`` — the kernel accumulates into VMEM scratch with no
+    initializing store at all: at grid step 0 the scratch is garbage.
+  * ``nowrap_call`` — the block-first predicate is the bare boundary
+    test ``blk != tile_block_ref[t - 1]`` without the ``t == 0`` wrap
+    guard: at grid step 0 the look-behind wraps to the last tile, the
+    test may evaluate false, and block 0 is never initialized.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _uninit_kernel(tile_block_ref, vals_ref, out_ref, acc_ref):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    blk = tile_block_ref[t]
+    last = jnp.logical_or(
+        t == num_tiles - 1,
+        tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)] != blk,
+    )
+
+    # BUG: no block-first store ever initializes acc_ref — the += below
+    # reads whatever the scratch held when the grid started.
+    acc_ref[...] += vals_ref[...][:, None]
+
+    @pl.when(last)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def uninit_call(tile_block, values, gathered, *, tile_nnz, rows_per_block, num_blocks):
+    nfac, nnz_pad, r_pad = gathered.shape
+    num_tiles = nnz_pad // tile_nnz
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[pl.BlockSpec((tile_nnz,), lambda t, tb: (t,))],
+        out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, r_pad), jnp.float32)],
+    )
+    out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
+    return pl.pallas_call(_uninit_kernel, grid_spec=grid_spec, out_shape=out_shape)(
+        tile_block, values
+    )
+
+
+def _nowrap_kernel(tile_block_ref, vals_ref, out_ref, acc_ref):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    blk = tile_block_ref[t]
+    # BUG: boundary test without the short-circuiting t == 0 wrap guard.
+    first = blk != tile_block_ref[t - 1]
+    last = jnp.logical_or(
+        t == num_tiles - 1,
+        tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)] != blk,
+    )
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = vals_ref[...][:, None] * 0.0
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        acc_ref[...] += vals_ref[...][:, None]
+
+    @pl.when(last)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def nowrap_call(tile_block, values, gathered, *, tile_nnz, rows_per_block, num_blocks):
+    nfac, nnz_pad, r_pad = gathered.shape
+    num_tiles = nnz_pad // tile_nnz
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[pl.BlockSpec((tile_nnz,), lambda t, tb: (t,))],
+        out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, r_pad), jnp.float32)],
+    )
+    out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
+    return pl.pallas_call(_nowrap_kernel, grid_spec=grid_spec, out_shape=out_shape)(
+        tile_block, values
+    )

@@ -1,0 +1,51 @@
+"""True-negative fixture for grid-carry-init: the shipped streaming idiom.
+
+A complete scalar-prefetch program whose scratch reads are provable:
+the wrap-guarded block-first predicate initializes the scratch, the
+block-interior accumulate and the block-last flush both read after it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _carry_kernel(tile_block_ref, vals_ref, out_ref, acc_ref):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    blk = tile_block_ref[t]
+    # the t == 0 short circuit makes the wrapped t-1 look-behind safe
+    first = jnp.logical_or(t == 0, blk != tile_block_ref[t - 1])
+    last = jnp.logical_or(
+        t == num_tiles - 1,
+        tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)] != blk,
+    )
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = vals_ref[...][:, None] * 0.0
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        acc_ref[...] += vals_ref[...][:, None]
+
+    @pl.when(last)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def carry_call(tile_block, values, gathered, *, tile_nnz, rows_per_block, num_blocks):
+    nfac, nnz_pad, r_pad = gathered.shape
+    num_tiles = nnz_pad // tile_nnz
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[pl.BlockSpec((tile_nnz,), lambda t, tb: (t,))],
+        out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, r_pad), jnp.float32)],
+    )
+    out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
+    return pl.pallas_call(_carry_kernel, grid_spec=grid_spec, out_shape=out_shape)(
+        tile_block, values
+    )

@@ -1,0 +1,90 @@
+"""True-positive fixture for traffic-model-drift: a doubled output store.
+
+Identical to the faithful mini MTTKRP of ``traffic_good.py`` except the
+block-last flush stores ``out_ref`` twice — the census's output-store
+term becomes ``2*I_mode*rank`` and no longer matches the model's one
+amortized output row per block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fx2_kernel(tile_block_ref, vals_ref, local_ref, fac_ref, out_ref, acc_ref, *, nfac):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    blk = tile_block_ref[t]
+    first = jnp.logical_or(t == 0, blk != tile_block_ref[t - 1])
+    last = jnp.logical_or(
+        t == num_tiles - 1,
+        tile_block_ref[jnp.minimum(t + 1, num_tiles - 1)] != blk,
+    )
+
+    prod = fac_ref[0].astype(jnp.float32)
+    for k in range(1, nfac):
+        prod = prod * fac_ref[k].astype(jnp.float32)
+    prod = prod * vals_ref[...].astype(jnp.float32)[:, None]
+
+    rows_per_block = out_ref.shape[0]
+    tile_nnz = prod.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (rows_per_block, tile_nnz), 0)
+    onehot = (row_iota == local_ref[...][None, :]).astype(jnp.float32)
+    contrib = jnp.dot(onehot, prod, preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(jnp.logical_not(first))
+    def _accum():
+        acc_ref[...] += contrib
+
+    @pl.when(last)
+    def _flush():
+        # BUG: the output block is stored twice per flush — 2x the
+        # model's amortized output traffic.
+        out_ref[...] = acc_ref[...]
+        out_ref[...] = acc_ref[...]
+
+
+def fx2_stream_call(
+    tile_block, values, local_row, gathered, *, tile_nnz, rows_per_block, num_blocks
+):
+    nfac, nnz_pad, r_pad = gathered.shape
+    num_tiles = nnz_pad // tile_nnz
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_nnz,), lambda t, tb: (t,)),
+            pl.BlockSpec((tile_nnz,), lambda t, tb: (t,)),
+            pl.BlockSpec((nfac, tile_nnz, r_pad), lambda t, tb: (0, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, r_pad), lambda t, tb: (tb[t], 0)),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, r_pad), jnp.float32)],
+    )
+    out_shape = jax.ShapeDtypeStruct((num_blocks * rows_per_block, r_pad), jnp.float32)
+    kernel = functools.partial(_fx2_kernel, nfac=nfac)
+    return pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape)(
+        tile_block, values, local_row, gathered
+    )
+
+
+def fx2_dispatch(plan, factors, mode, *, tile_nnz, rows_per_block, num_blocks):
+    other = [k for k in range(len(factors)) if k != mode]
+    gathered = jnp.stack(
+        [jnp.take(factors[k], plan.indices[:, k], axis=0) for k in other]
+    )
+    return fx2_stream_call(
+        plan.tile_block,
+        plan.values,
+        plan.local_row,
+        gathered,
+        tile_nnz=tile_nnz,
+        rows_per_block=rows_per_block,
+        num_blocks=num_blocks,
+    )

@@ -24,9 +24,10 @@ REPO = Path(__file__).resolve().parents[1]
 FIXTURES = Path(__file__).resolve().parent / "analysis_fixtures"
 
 
-def fixture_report(check_id: str, *relpaths: str):
+def fixture_report(check_id: str | list[str], *relpaths: str):
     files = [SourceFile(FIXTURES / p, FIXTURES) for p in relpaths]
-    return run_analysis(FIXTURES, checks=[check_id], files=files)
+    checks = [check_id] if isinstance(check_id, str) else check_id
+    return run_analysis(FIXTURES, checks=checks, files=files)
 
 
 def messages(report) -> str:
@@ -40,7 +41,7 @@ def messages(report) -> str:
 
 def test_registry_has_the_contracted_checkers():
     ids = default_checkers()
-    assert len(ids) >= 5
+    assert len(ids) >= 9
     for cid in (
         "pallas-kernel-contract",
         "trace-safety",
@@ -48,8 +49,19 @@ def test_registry_has_the_contracted_checkers():
         "kwarg-threading",
         "shared-state-safety",
         "docs-citation",
+        "grid-carry-init",
+        "traffic-model-drift",
+        "stale-suppression",
     ):
         assert cid in ids
+
+
+def test_tests_tree_is_scanned_but_fixtures_are_waived():
+    from repro.analysis.core import DEFAULT_SCAN_DIRS, is_fixture_path
+
+    assert "tests" in DEFAULT_SCAN_DIRS
+    assert is_fixture_path("tests/analysis_fixtures/src/repro/fx_trace_bad.py")
+    assert not is_fixture_path("tests/test_kernels.py")
 
 
 def test_fingerprint_is_line_independent():
@@ -189,6 +201,111 @@ def test_docs_citation_true_negative():
     assert report.facts["docs-citation"]["citations"] == 1
 
 
+def test_grid_carry_init_true_positive():
+    report = fixture_report(
+        "grid-carry-init", "src/repro/kernels/fx/carry_bad.py"
+    )
+    msgs = messages(report)
+    assert "without the t==0 wrap guard" in msgs
+    assert "uninitialized garbage" in msgs
+    assert len(report.active) == 5
+    programs = report.facts["grid-carry-init"]["programs"]
+    assert {p["program"] for p in programs} == {"uninit_call", "nowrap_call"}
+    assert all(p["reads_proven"] == 0 for p in programs)
+
+
+def test_grid_carry_init_true_negative():
+    report = fixture_report(
+        "grid-carry-init", "src/repro/kernels/fx/carry_good.py"
+    )
+    assert report.findings == []
+    (program,) = report.facts["grid-carry-init"]["programs"]
+    assert program["program"] == "carry_call"
+    assert program["scratch_refs"] == ["acc_ref"]
+    assert program["reads_proven"] == 2  # the interior += and the flush read
+
+
+def test_traffic_drift_true_positive():
+    report = fixture_report(
+        "traffic-model-drift", "src/repro/kernels/fx/traffic_bad.py"
+    )
+    msgs = messages(report)
+    assert "output stores drift" in msgs
+    assert "2*I_mode*rank" in msgs
+    assert len(report.active) == 2  # one per checked nmodes
+
+
+def test_traffic_drift_true_negative():
+    report = fixture_report(
+        "traffic-model-drift", "src/repro/kernels/fx/traffic_good.py"
+    )
+    assert report.findings == []
+    facts = report.facts["traffic-model-drift"]
+    (census,) = facts["censuses"]
+    assert census["program"] == "fx_stream_call"
+    # 4 orderings x 3 modes on the replay tensor, all exact
+    assert facts["replays_verified"] == 12
+
+
+def test_stale_suppression_true_positive():
+    report = fixture_report(
+        ["kwarg-threading", "stale-suppression"], "src/repro/fx_stale.py"
+    )
+    assert len(report.active) == 1
+    f = report.active[0]
+    assert f.check_id == "stale-suppression"
+    assert "matched no finding this run" in f.message
+    assert report.facts["stale-suppression"] == {
+        "suppressions_audited": 1,
+        "stale": 1,
+    }
+
+
+def test_stale_suppression_true_negative():
+    # fx_suppressed.py's waiver matches a real kwarg-threading finding,
+    # so the audit must NOT flag it
+    report = fixture_report(
+        ["kwarg-threading", "stale-suppression"], "src/repro/fx_suppressed.py"
+    )
+    assert report.active == []
+    assert len(report.suppressed) == 1
+    assert report.facts["stale-suppression"] == {
+        "suppressions_audited": 1,
+        "stale": 0,
+    }
+
+
+def test_stale_suppression_only_judges_checks_that_ran():
+    # kwarg-threading did not run, so its waiver is neither judged stale
+    # nor counted as audited
+    report = fixture_report(["stale-suppression"], "src/repro/fx_stale.py")
+    assert report.findings == []
+    assert report.facts["stale-suppression"] == {
+        "suppressions_audited": 0,
+        "stale": 0,
+    }
+
+
+def test_fingerprint_survives_line_shifts_in_the_fixture(tmp_path):
+    """Inserting lines above a finding must not rotate its fingerprint
+    (else every unrelated edit would invalidate the baseline)."""
+    root = tmp_path / "mini"
+    (root / "src").mkdir(parents=True)
+    target = root / "src" / "wrap.py"
+    target.write_text((FIXTURES / "src/repro/fx_kwarg_bad.py").read_text())
+
+    before = run_analysis(root, checks=["kwarg-threading"])
+    assert before.findings
+    # edit the file in place: three pad lines shift every def downward
+    target.write_text("# pad\n# pad\n# pad\n" + target.read_text())
+    after = run_analysis(root, checks=["kwarg-threading"])
+
+    assert [f.line for f in after.findings] != [f.line for f in before.findings]
+    assert {f.fingerprint for f in after.findings} == {
+        f.fingerprint for f in before.findings
+    }
+
+
 # ---------------------------------------------------------------------------
 # the repo dogfoods its own gate
 # ---------------------------------------------------------------------------
@@ -221,14 +338,45 @@ def test_repo_pallas_write_only_proof():
     assert mttkrp["carried_loads"] == mttkrp["guarded_loads"]
 
 
+def test_repo_grid_carry_proof():
+    report = run_analysis(REPO, checks=["grid-carry-init"])
+    assert report.active == []
+    programs = {
+        p["program"]: p for p in report.facts["grid-carry-init"]["programs"]
+    }
+    mttkrp = programs["mttkrp_pallas_call"]
+    assert mttkrp["scratch_refs"] == ["acc_ref"]
+    assert mttkrp["reads_proven"] == 2
+
+
+def test_repo_traffic_drift_gate_is_zero_discrepancy():
+    report = run_analysis(REPO, checks=["traffic-model-drift"])
+    assert report.active == [], "\n".join(f.message for f in report.active)
+    facts = report.facts["traffic-model-drift"]
+    programs = {c["program"]: c for c in facts["censuses"]}
+    assert set(programs) == {"mttkrp_pallas_call", "mttkrp_xla_call"}
+    # both kernels x 4 orderings x 3 modes, every replay exact
+    assert facts["replays_verified"] == 24
+    # the flash-attention kernel is skipped with a recorded reason
+    assert any(
+        "flash_attention" in s["file"] for s in facts["skipped_programs"]
+    )
+
+
 def test_committed_report_matches_reality():
     committed = json.loads((REPO / "BENCH_analysis.json").read_text())
     assert committed["schema"] == "repro.analysis/v1"
     assert committed["totals"]["active"] == 0
     fresh = run_analysis(REPO)
-    assert fresh.to_dict()["facts"]["pallas-kernel-contract"] == (
+    fresh_facts = fresh.to_dict()["facts"]
+    assert fresh_facts["pallas-kernel-contract"] == (
         committed["facts"]["pallas-kernel-contract"]
     )
+    # the symbolic traffic census rides in the committed report
+    assert fresh_facts["traffic-model-drift"] == (
+        committed["facts"]["traffic-model-drift"]
+    )
+    assert fresh_facts["grid-carry-init"] == committed["facts"]["grid-carry-init"]
 
 
 def test_cli_gate_passes_on_the_repo():
@@ -265,6 +413,76 @@ def test_cli_baseline_tolerates_known_findings(tmp_path):
     proc = subprocess.run(cli + ["--baseline", str(baseline), "-q"],
                           capture_output=True, text=True)
     assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_prune_baseline_drops_fixed_findings(tmp_path):
+    bad = FIXTURES / "src/repro/fx_kwarg_bad.py"
+    good = FIXTURES / "src/repro/fx_kwarg_good.py"
+    root = tmp_path / "mini"
+    (root / "src").mkdir(parents=True)
+    target = root / "src" / "wrap.py"
+    target.write_text(bad.read_text())
+    baseline = tmp_path / "baseline.json"
+    cli = [sys.executable, str(REPO / "scripts" / "run_analysis.py"),
+           "--root", str(root), "--checks", "kwarg-threading"]
+
+    subprocess.run(cli + ["--write-baseline", str(baseline)], check=True,
+                   capture_output=True)
+    assert json.loads(baseline.read_text())["fingerprints"]
+
+    # the violation is fixed; pruning empties the baseline
+    target.write_text(good.read_text())
+    proc = subprocess.run(
+        cli + ["--baseline", str(baseline), "--prune-baseline"],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "pruned" in proc.stdout
+    assert json.loads(baseline.read_text())["fingerprints"] == []
+
+
+def test_cli_prune_baseline_requires_a_baseline(tmp_path):
+    root = tmp_path / "mini"
+    (root / "src").mkdir(parents=True)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "run_analysis.py"),
+         "--root", str(root), "--prune-baseline"],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 2
+    assert "--baseline" in proc.stderr
+
+
+def test_cli_changed_vs_narrows_the_scan(tmp_path):
+    """--changed-vs scans only files changed against the git ref: a
+    committed-and-unchanged violation is invisible, an untracked clean
+    file keeps the gate green."""
+    bad = (FIXTURES / "src/repro/fx_kwarg_bad.py").read_text()
+    good = (FIXTURES / "src/repro/fx_kwarg_good.py").read_text()
+    root = tmp_path / "mini"
+    (root / "src").mkdir(parents=True)
+    (root / "src" / "committed_bad.py").write_text(bad)
+    git = ["git", "-C", str(root), "-c", "user.email=t@t", "-c", "user.name=t"]
+    subprocess.run(git + ["init", "-q"], check=True, capture_output=True)
+    subprocess.run(git + ["add", "-A"], check=True, capture_output=True)
+    subprocess.run(git + ["commit", "-qm", "seed"], check=True,
+                   capture_output=True)
+
+    cli = [sys.executable, str(REPO / "scripts" / "run_analysis.py"),
+           "--root", str(root), "--checks", "kwarg-threading",
+           "--changed-vs", "HEAD"]
+
+    # untracked clean file: scanned, no findings; the committed bad file
+    # is unchanged and therefore not scanned at all
+    (root / "src" / "new_good.py").write_text(good)
+    proc = subprocess.run(cli + ["-q"], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    # touching the bad file brings it back into scope
+    (root / "src" / "committed_bad.py").write_text(bad + "\n# touched\n")
+    proc = subprocess.run(cli + ["-q"], capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "new finding" in proc.stderr
 
 
 # ---------------------------------------------------------------------------
